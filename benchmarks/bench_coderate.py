@@ -1,0 +1,31 @@
+"""Paper Fig. 6(b): BER vs code rate at fixed word length 512
+(rates 0.33 / 0.5 / 0.67 / 0.8). Lower rate => more redundancy => better
+correction, at decoding-overhead cost."""
+from __future__ import annotations
+
+from repro.core import get_code
+from .ber_common import ber_curve
+
+RAW_BERS = [1e-3, 3e-4, 1e-4, 3e-5, 1e-5]
+RATES = ["wl512_r033", "wl512_r05", "wl512_r067", "wl512_r08"]
+
+
+def main(quick: bool = False):
+    rows = []
+    names = ["wl512_r033", "wl512_r08"] if quick else RATES
+    trials = 48 if quick else 96
+    for name in names:
+        code = get_code(name)
+        curve, _ = ber_curve(code, RAW_BERS, trials=trials,
+                             max_errors=10 if quick else 14)
+        for eps, post in curve.items():
+            rows.append({"bench": "coderate_fig6b", "code": name,
+                         "rate": round(code.rate, 3), "raw_ber": eps,
+                         "post_ber": post,
+                         "improvement": eps / max(post, 1e-12)})
+    return rows
+
+
+if __name__ == "__main__":
+    for row in main():
+        print(row)

@@ -1,0 +1,36 @@
+"""Paper Fig. 6(a): BER improvement vs word length (32..1024, rate 0.8).
+
+Validation targets: longer codes correct better at fixed rate; the wl=1024
+point improves raw BER 1e-5 by ~59.65x (paper: to 1.676e-7; exact value
+depends on the random H draw — we validate the order of magnitude)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import get_code
+from .ber_common import ber_curve
+
+RAW_BERS = [1e-3, 3e-4, 1e-4, 3e-5, 1e-5]
+WORDLENS = {"wl32_r08": 32, "wl64_r08": 64, "wl128_r08": 128,
+            "wl256_r08": 256, "wl512_r08": 512, "wl1024_r08": 1024}
+
+
+def main(quick: bool = False):
+    rows = []
+    names = (["wl64_r08", "wl256_r08", "wl1024_r08"] if quick
+             else list(WORDLENS))
+    trials = 48 if quick else 96
+    for name in names:
+        code = get_code(name)
+        curve, r = ber_curve(code, RAW_BERS, trials=trials,
+                             max_errors=10 if quick else 12)
+        for eps, post in curve.items():
+            rows.append({"bench": "wordlen_fig6a", "code": name,
+                         "n": code.n, "raw_ber": eps, "post_ber": post,
+                         "improvement": eps / max(post, 1e-12)})
+    return rows
+
+
+if __name__ == "__main__":
+    for row in main():
+        print(row)

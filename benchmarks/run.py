@@ -1,0 +1,78 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+
+Prints one CSV-ish line per measurement and a per-bench validation summary
+(EXPERIMENTS.md mirrors these numbers)."""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+BENCHES = [
+    ("wordlen_fig6a", "benchmarks.bench_wordlen"),
+    ("coderate_fig6b", "benchmarks.bench_coderate"),
+    ("dnn_fig6c", "benchmarks.bench_dnn_recovery"),
+    ("table2_efficiency", "benchmarks.bench_ecc_efficiency"),
+    ("decoder_throughput_fig5", "benchmarks.bench_decoder_throughput"),
+    ("dse_fig7", "benchmarks.bench_dse"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    all_rows = {}
+    for name, mod_name in BENCHES:
+        if args.only and args.only not in name:
+            continue
+        mod = __import__(mod_name, fromlist=["main"])
+        t0 = time.time()
+        try:
+            rows = mod.main(quick=args.quick)
+        except Exception as e:                           # noqa: BLE001
+            print(f"[{name}] FAILED: {type(e).__name__}: {e}", flush=True)
+            continue
+        dt = time.time() - t0
+        all_rows[name] = rows
+        print(f"\n=== {name} ({dt:.1f}s) ===", flush=True)
+        for r in rows:
+            print(",".join(f"{k}={v:.4g}" if isinstance(v, float)
+                           else f"{k}={v}" for k, v in r.items()), flush=True)
+
+    # headline validations
+    print("\n=== validation summary ===")
+    wl = all_rows.get("wordlen_fig6a", [])
+    big = [r for r in wl if r.get("n") == 1024 and r.get("raw_ber") == 1e-5]
+    if big:
+        post = float(big[0]["post_ber"])
+        # conditional-MC resolution: one residual symbol in (trials x n)
+        floor = 1.0 / (96 * 1024) * 0.05   # ~ pmf-weighted floor at 1e-5
+        if post <= floor:
+            print(f"wl1024 @ raw 1e-5: post < {floor:.1e} (no residual "
+                  f"errors in any conditional trial) => improvement >= "
+                  f"{1e-5 / floor:.0f}x — consistent with the paper's "
+                  f"59.65x to 1.676e-7, below our measurement floor")
+        else:
+            print(f"wl1024 @ raw 1e-5: post={post:.3g} "
+                  f"improvement={1e-5 / post:.1f}x "
+                  f"(paper: 59.65x to 1.676e-7)")
+    t2 = all_rows.get("table2_efficiency", [])
+    ours = [r for r in t2 if r.get("design") == "this_work_nbldpc"]
+    if ours:
+        print(f"ECC efficiency: {ours[0]['eff_mbps_w']} Mbps/W, "
+              f"{ours[0]['improvement_vs_best']}x best prior "
+              f"(paper: 1152.00, 2.978x); MTE={ours[0]['mte_measured']} "
+              f"(paper: 5 @ wl256)")
+    os.makedirs("results", exist_ok=True)
+    with open("results/bench_rows.json", "w") as f:
+        json.dump(all_rows, f, indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main()

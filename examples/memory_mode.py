@@ -1,0 +1,36 @@
+"""Memory-mode example (paper §3.1): NB-LDPC protecting *stored* data — here
+the framework's own checkpoints. Bit flips injected into the stored codewords
+are corrected transparently on restore.
+
+Run:  PYTHONPATH=src python examples/memory_mode.py
+"""
+import glob
+import tempfile
+
+import numpy as np
+
+from repro import checkpoint as ckpt
+
+with tempfile.TemporaryDirectory() as d:
+    tree = {"layer/w": np.linspace(-2, 2, 4096).astype(np.float32).reshape(64, 64),
+            "layer/b": np.zeros(64, np.float32)}
+    path = ckpt.save_checkpoint(d, 100, tree, protect=True)
+    print(f"saved NB-LDPC-protected checkpoint: {path}")
+
+    # simulate storage corruption: flip symbols in the stored codewords
+    n_flips = 24
+    rng = np.random.default_rng(0)
+    for fn in glob.glob(d + "/step_*/*.prot.npz"):
+        z = dict(np.load(fn))
+        enc = z["enc"].copy()
+        for _ in range(n_flips // 2):
+            r, c = rng.integers(0, enc.shape[0]), rng.integers(0, enc.shape[1])
+            enc[r, c] = (enc[r, c] + rng.integers(1, 3)) % 3
+        np.savez(fn[:-4], **{**z, "enc": enc})
+    print(f"injected ~{n_flips} symbol flips into stored codewords")
+
+    out, man = ckpt.restore_checkpoint(d, tree)
+    ok = all(np.array_equal(out[k], tree[k]) for k in tree)
+    print(f"restore with FBP correction: exact={ok}")
+    assert ok
+    print("OK: memory-mode NB-LDPC recovered the corrupted checkpoint.")

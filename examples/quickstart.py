@@ -1,0 +1,52 @@
+"""Quickstart: the paper's NB-LDPC arithmetic code in 60 lines.
+
+1. build a GF(3) code, 2. encode a weight matrix (check columns ride along),
+3. run the PIM MAC with injected analog faults (Eq. 4), 4. detect via the
+syndrome (Eq. 5), 5. correct with the FBP decoder (§3.2), 6. compare.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (PIMConfig, ProtectionConfig, encode_weight_matrix,
+                        get_code, pim_mac, protected_pim_matmul, syndrome)
+
+rng = np.random.default_rng(0)
+code = get_code("wl160_r08")          # 160 GF(3) symbols, rate 0.8
+print(f"code: n={code.n} k={code.k} GF({code.p}) rate={code.rate:.2f} "
+      f"(paper §3: H_G·H_Cᵀ=0)")
+
+# --- ternary weights (differential mapping, §3.3) + encode -----------------
+n_in, n_out = 96, 2 * code.k
+W = jnp.asarray(rng.integers(-1, 2, (n_in, n_out)), jnp.int32)
+W_enc = encode_weight_matrix(W, code)
+print(f"stored array: {W.shape} -> {W_enc.shape} "
+      f"(+{W_enc.shape[1] - n_out} check columns)")
+
+# --- PIM MAC with faults (the analog path is noisy, Fig. 1a) ---------------
+x = jnp.asarray(rng.integers(-1, 2, (8, n_in)), jnp.int32)
+exact = x @ W
+noisy_cfg = PIMConfig(output_error_rate=0.01, output_error_mag=1)
+Y_noisy = pim_mac(x, W_enc, noisy_cfg, key=jax.random.PRNGKey(7))
+
+# --- detect (Eq. 5): syndrome of the *MAC output*, dataflow uninterrupted --
+synd = syndrome(Y_noisy.reshape(-1, code.n) % code.p, code)
+n_bad_words = int((np.asarray(synd) != 0).any(-1).sum())
+print(f"syndrome flags {n_bad_words}/{synd.shape[0]} MAC output words")
+
+# --- correct (§3.2: LLV init -> FBP iterations -> reinterpret) -------------
+res = protected_pim_matmul(x, W_enc, code,
+                           ProtectionConfig(mode="correct", n_iters=10,
+                                            damping=0.3),
+                           noisy_cfg, key=jax.random.PRNGKey(7))
+
+raw = protected_pim_matmul(x, W_enc, code, ProtectionConfig(mode="off"),
+                           noisy_cfg, key=jax.random.PRNGKey(7))
+err_before = float((np.asarray(raw.y) != np.asarray(exact)).mean())
+err_after = float((np.asarray(res.y) != np.asarray(exact)).mean())
+print(f"integer error rate: {err_before:.4f} -> {err_after:.4f} "
+      f"({err_before / max(err_after, 1e-9):.1f}x improvement)")
+assert err_after < err_before
+print("OK: NB-LDPC corrected the PIM MAC without interrupting the dataflow.")

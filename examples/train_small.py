@@ -1,0 +1,22 @@
+"""End-to-end training driver example: a ~100M-param granite-family model on
+the synthetic pipeline with checkpoints, restart safety and the straggler
+watchdog. (Reduced geometry so it runs on CPU; the same driver lowers the
+full configs on TPU meshes.)
+
+Run:  PYTHONPATH=src python examples/train_small.py [--steps 200]
+"""
+import sys
+
+from repro.launch import train
+
+if __name__ == "__main__":
+    steps = "200"
+    if "--steps" in sys.argv:
+        steps = sys.argv[sys.argv.index("--steps") + 1]
+    # d_model 768 x 12 groups ~= 100M params
+    train.main(["--arch", "granite_3_2b", "--reduced",
+                "--d-model", "768", "--n-groups", "12",
+                "--vocab", "4096", "--seq", "256", "--batch", "8",
+                "--steps", steps, "--lr", "1e-3",
+                "--ckpt-dir", "/tmp/repro_train_small",
+                "--save-every", "50", "--log-every", "10"])

@@ -1,0 +1,3 @@
+"""Architecture configs for the assigned (arch x shape) grid + the paper's own."""
+from .base import (ArchConfig, LayerSpec, PIMSpec, ShapeSpec, SHAPES,
+                   ARCH_IDS, get_config)

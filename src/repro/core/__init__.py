@@ -1,0 +1,11 @@
+"""Core NB-LDPC arithmetic error correction for PIM (the paper's contribution)."""
+from .construction import LDPCCode, build_code
+from .codes import get_code, REGISTRY as CODE_REGISTRY
+from .encode import (encode_words, encode_weight_matrix, syndrome,
+                     np_encode_words)
+from .decode import decode_llv, decode_integers, DecodeResult, maxplus_conv
+from .llv import init_llv, reinterpret, circular_distance
+from .pim import PIMConfig, pim_mac
+from .protected import (ProtectionConfig, ProtectedResult,
+                        protected_pim_matmul, prepare_weights, strip_padding)
+from .context import PIMContext

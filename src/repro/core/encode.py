@@ -1,0 +1,50 @@
+"""Encoding: systematic NB-LDPC encode of words and of weight matrices.
+
+Memory mode  (paper §3.1): w' = w · H_G, i.e. checks r = w · P  (mod p).
+PIM mode     (paper Eq. 4): every *row* of the stored weight matrix is a
+codeword; the MAC output then satisfies Y' · H_Cᵀ ≡ 0 (mod p) by linearity.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from .construction import LDPCCode
+
+
+def encode_words(w, code: LDPCCode):
+    """w: (..., k) field symbols -> (..., n) codewords [w | checks]."""
+    P = jnp.asarray(code.P, dtype=jnp.int32)
+    checks = (w.astype(jnp.int32) @ P) % code.p
+    return jnp.concatenate([w.astype(jnp.int32), checks], axis=-1)
+
+
+def syndrome(y_field, code: LDPCCode):
+    """y_field: (..., n) field symbols -> (..., c) syndromes (mod p)."""
+    H = jnp.asarray(code.H, dtype=jnp.int32)
+    return (y_field.astype(jnp.int32) @ H.T) % code.p
+
+
+def encode_weight_matrix(W_int, code: LDPCCode):
+    """Encode integer weights for PIM storage.
+
+    W_int: (n_in, n_blocks * k) integers (e.g. differential ternary in
+    {-1,0,1}).  Returns W_enc (n_in, n_blocks * n) where each k-column block
+    gains c check columns computed over GF(p), stored as *centered* integers so
+    ternary hardware cells can hold them (for p=3 checks land in {-1,0,1}).
+    """
+    n_in, n_out = W_int.shape
+    assert n_out % code.k == 0, f"out dim {n_out} not a multiple of k={code.k}"
+    nb = n_out // code.k
+    Wb = W_int.reshape(n_in, nb, code.k)
+    P = jnp.asarray(code.P, dtype=jnp.int32)
+    checks = (Wb.astype(jnp.int32) % code.p) @ P % code.p
+    # centered lift keeps check cells in the same dynamic range as data cells
+    checks = jnp.where(checks > code.p // 2, checks - code.p, checks)
+    W_enc = jnp.concatenate([Wb.astype(jnp.int32), checks], axis=-1)
+    return W_enc.reshape(n_in, nb * code.n)
+
+
+def np_encode_words(w: np.ndarray, code: LDPCCode) -> np.ndarray:
+    checks = (w.astype(np.int64) @ code.P) % code.p
+    return np.concatenate([w.astype(np.int64), checks], axis=-1)

@@ -1,0 +1,43 @@
+"""Logarithmic Likelihood Value (LLV) initialization and arithmetic
+re-interpretation (paper §3.2.1 and §3.2.3).
+
+LLV convention: larger = more likely (log domain). Vectors are length-p along
+the last axis, one entry per field element k ∈ GF(p).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e9
+
+
+def circular_distance(y, p: int):
+    """d[..., k] = min_{z ≡ k (mod p)} |y - z| — the 1-D Manhattan distance of a
+    received (integer or analog) value to the nearest representative of each
+    residue class (paper Fig. 3(b))."""
+    ks = jnp.arange(p, dtype=y.dtype if jnp.issubdtype(y.dtype, jnp.floating) else jnp.int32)
+    t = (ks - y[..., None]) % p          # in [0, p)
+    return jnp.minimum(t, p - t)
+
+
+def init_llv(y, p: int, *, scale: float = 4.0, mode: str = "manhattan"):
+    """Prior LLVs for received values `y` (any shape) -> (*y.shape, p).
+
+    mode="manhattan": paper's simplified 1-D Manhattan-distance LLV.
+    mode="gaussian":  full-precision likelihood under additive Gaussian noise
+                      (the baseline the paper's simplification trades against).
+    """
+    d = circular_distance(y.astype(jnp.float32), p)
+    if mode == "manhattan":
+        return -scale * d
+    elif mode == "gaussian":
+        return -0.5 * scale * d * d
+    raise ValueError(f"unknown LLV mode {mode!r}")
+
+
+def reinterpret(y, decided, p: int):
+    """Paper §3.2.3: move the received integer y to the *nearest* value whose
+    residue mod p equals the decoded symbol.  delta ∈ (-p/2, p/2]."""
+    delta = (decided.astype(jnp.int32) - y.astype(jnp.int32)) % p
+    delta = jnp.where(delta > p // 2, delta - p, delta)
+    return y + delta.astype(y.dtype)

@@ -1,0 +1,100 @@
+"""PIM MAC simulation (paper §2.1, §5).
+
+Models the analog compute path of a PIM macro:
+  - weights stored as multi-level cells (GF(p) symbols / differential ternary),
+  - bit-serial inputs driving wordlines,
+  - bitline accumulation over `row_parallelism` rows at a time,
+  - ADC quantization (few-level flash ADC) of each partial sum,
+  - stochastic fault models: stored-cell symbol flips and per-sample additive
+    integer errors on the accumulated output (the paper's Fig. 6(c) model:
+    "fixed probability of bit flip during computation", affecting both weights
+    and activations/outputs).
+
+Noise is injected from explicit PRNG keys so every simulation is
+deterministic and testable; kernels receive pre-drawn noise tensors.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class PIMConfig:
+    row_parallelism: int = 0          # rows accumulated per analog step; 0 = all
+    adc_levels: int = 0               # 0 = ideal ADC (no clipping/rounding)
+    weight_flip_rate: float = 0.0     # P[a stored cell reads as a wrong symbol]
+    output_error_rate: float = 0.0    # P[an accumulated output gains ±e]
+    output_error_mag: int = 1         # e: magnitude of injected output errors
+    p: int = 3                        # field order (cells hold GF(p) symbols)
+
+
+def flip_weights(key, W: jnp.ndarray, cfg: PIMConfig) -> jnp.ndarray:
+    """Cell-read fault: each cell independently flips to a *different* symbol
+    with prob weight_flip_rate (uniform over the p-1 wrong symbols), in the
+    centered-lift representation."""
+    if cfg.weight_flip_rate <= 0:
+        return W
+    kf, kv = jax.random.split(key)
+    flip = jax.random.bernoulli(kf, cfg.weight_flip_rate, W.shape)
+    delta = jax.random.randint(kv, W.shape, 1, cfg.p)        # 1..p-1
+    Wf = (W % cfg.p + delta) % cfg.p
+    Wf = jnp.where(Wf > cfg.p // 2, Wf - cfg.p, Wf)          # centered lift
+    return jnp.where(flip, Wf.astype(W.dtype), W)
+
+
+def perturb_output(key, Y: jnp.ndarray, cfg: PIMConfig) -> jnp.ndarray:
+    """Additive integer error on MAC outputs: ±output_error_mag w.p.
+    output_error_rate (sign uniform)."""
+    if cfg.output_error_rate <= 0:
+        return Y
+    ke, ks = jax.random.split(key)
+    hit = jax.random.bernoulli(ke, cfg.output_error_rate, Y.shape)
+    sign = jax.random.rademacher(ks, Y.shape, dtype=jnp.int32)
+    return Y + jnp.where(hit, sign * cfg.output_error_mag, 0).astype(Y.dtype)
+
+
+def adc_quantize(partial: jnp.ndarray, cfg: PIMConfig) -> jnp.ndarray:
+    """Flash-ADC model: clip each analog partial sum to the ADC range.
+
+    A 2.5-bit flash ADC (paper §5) resolves ~6 levels; partial sums outside
+    [-(L//2), L//2] saturate. With ideal ADC (adc_levels=0) this is identity.
+    """
+    if cfg.adc_levels <= 0:
+        return partial
+    half = cfg.adc_levels // 2
+    return jnp.clip(partial, -half, half)
+
+
+def pim_mac(x: jnp.ndarray, W: jnp.ndarray, cfg: PIMConfig,
+            key: Optional[jax.Array] = None) -> jnp.ndarray:
+    """Simulated PIM VMM:  Y = X · W  (paper Eq. 1 / Eq. 4).
+
+    x: (B, n_in) integers (bit-serial input values), W: (n_in, n_out) integer
+    cell values (data + check columns if encoded).  Accumulation happens in
+    row groups of cfg.row_parallelism with ADC quantization per group.
+    """
+    n_in = W.shape[0]
+    if key is not None:
+        kw, ko = jax.random.split(key)
+        W = flip_weights(kw, W, cfg)
+    x32 = x.astype(jnp.int32)
+    W32 = W.astype(jnp.int32)
+    R = cfg.row_parallelism if cfg.row_parallelism > 0 else n_in
+    if n_in % R != 0:
+        pad = R - n_in % R
+        x32 = jnp.pad(x32, ((0, 0), (0, pad)))
+        W32 = jnp.pad(W32, ((0, pad), (0, 0)))
+        n_in = n_in + pad
+    g = n_in // R
+    xg = x32.reshape(x32.shape[0], g, R)
+    Wg = W32.reshape(g, R, W32.shape[1])
+    partial = jnp.einsum("bgr,gro->bgo", xg, Wg)           # analog partial sums
+    partial = adc_quantize(partial, cfg)
+    Y = partial.sum(axis=1)
+    if key is not None:
+        Y = perturb_output(ko, Y, cfg)
+    return Y

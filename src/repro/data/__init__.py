@@ -1,0 +1,2 @@
+"""Deterministic shard-aware resumable data pipeline."""
+from .pipeline import DataConfig, TokenPipeline

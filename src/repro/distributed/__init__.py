@@ -1,0 +1,5 @@
+"""Distribution: logical-axis sharding, fault tolerance, compression."""
+from .sharding import (use_rules, rules_for, constrain, named_sharding,
+                       resolve_spec, active_mesh, RULES_SINGLE_POD,
+                       RULES_MULTI_POD)
+from .fault import RestartManager, StragglerWatchdog, elastic_shardings

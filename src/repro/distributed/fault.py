@@ -1,0 +1,109 @@
+"""Fault tolerance: restart manager and straggler watchdog.
+
+At thousand-node scale the framework assumes failures are routine, not
+exceptional (DESIGN.md §5):
+
+- `RestartManager` drives the train loop: it restores the newest checkpoint
+  (params + optimizer + data-pipeline step) on entry, saves every
+  `save_every` steps, and `run()` retries the loop across worker crashes
+  with bounded restarts — the single-process analogue of a cluster
+  controller re-scheduling a failed pod onto a fresh host.
+- `StragglerWatchdog` tracks a step-time EWMA; a step slower than
+  `threshold ×` the EWMA is flagged. On a real multi-host deployment the
+  flag feeds the backup-replica policy (re-dispatch the slow host's shard);
+  here it logs and counts, and the policy hook is injectable.
+- `elastic_shardings()` re-derives NamedShardings for a *different* mesh
+  than the one a checkpoint was written on — restores are device-count
+  independent because checkpoints store full (unsharded) arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Any, Callable, Optional
+
+import jax
+
+from repro import checkpoint as ckpt
+from repro.distributed.sharding import named_sharding
+
+log = logging.getLogger("repro.fault")
+
+
+class StragglerWatchdog:
+    def __init__(self, threshold: float = 2.0, alpha: float = 0.1,
+                 on_straggler: Optional[Callable[[int, float, float], None]]
+                 = None):
+        self.threshold = threshold
+        self.alpha = alpha
+        self.ewma: Optional[float] = None
+        self.flagged: list[tuple[int, float]] = []
+        self.on_straggler = on_straggler
+        self._t0: Optional[float] = None
+
+    def step_start(self):
+        self._t0 = time.perf_counter()
+
+    def step_end(self, step: int) -> float:
+        dt = time.perf_counter() - self._t0
+        if self.ewma is not None and dt > self.threshold * self.ewma:
+            self.flagged.append((step, dt))
+            log.warning("straggler: step %d took %.3fs (EWMA %.3fs)",
+                        step, dt, self.ewma)
+            if self.on_straggler:
+                self.on_straggler(step, dt, self.ewma)
+        self.ewma = dt if self.ewma is None else (
+            (1 - self.alpha) * self.ewma + self.alpha * dt)
+        return dt
+
+
+def elastic_shardings(mesh, rules: dict, axes_tree):
+    """Pytree of NamedShardings for `axes_tree` (logical axes) on `mesh`."""
+    return jax.tree.map(
+        lambda ax: named_sharding(mesh, rules, ax), axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple))
+
+
+@dataclasses.dataclass
+class RestartManager:
+    directory: str
+    save_every: int = 50
+    max_restarts: int = 3
+    protect: bool = False
+
+    def restore_or_init(self, init_fn: Callable[[], Any], template=None,
+                        shardings=None):
+        """Returns (state, start_step, data_state). `state` comes from the
+        newest checkpoint if one exists, else `init_fn()`."""
+        step = ckpt.latest_step(self.directory)
+        if step is None:
+            state = init_fn()
+            return state, 0, None
+        template = template if template is not None else init_fn()
+        state, manifest = ckpt.restore_checkpoint(
+            self.directory, template, step=step, shardings=shardings)
+        log.info("restored checkpoint step=%d from %s", step, self.directory)
+        return state, step, manifest["extra"].get("data_state")
+
+    def maybe_save(self, step: int, state, data_state: Optional[dict] = None):
+        if step > 0 and step % self.save_every == 0:
+            ckpt.save_checkpoint(self.directory, step, state,
+                                 extra={"data_state": data_state},
+                                 protect=self.protect)
+
+    def run(self, make_loop: Callable[[int, Optional[dict]], int],
+            init_fn: Callable[[], Any]):
+        """Crash-resilient driver: `make_loop(start_step, data_state)` runs
+        until done (returns final step) or raises; on exception we restore
+        the newest checkpoint and re-enter, up to max_restarts."""
+        restarts = 0
+        while True:
+            state, start, data_state = self.restore_or_init(init_fn)
+            try:
+                return make_loop(start, data_state)
+            except Exception as e:                     # noqa: BLE001
+                restarts += 1
+                log.error("worker failed at restart %d: %s", restarts, e)
+                if restarts > self.max_restarts:
+                    raise

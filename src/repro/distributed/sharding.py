@@ -1,0 +1,93 @@
+"""Logical-axis sharding: models annotate tensors with *logical* axis names;
+a per-launch rule table maps them to physical mesh axes.
+
+Models call `constrain(x, "batch", None, "d_ff")` — a no-op when no mesh/rules
+are active (CPU unit tests), a `with_sharding_constraint` under an active
+`use_rules(mesh, rules)` context (dry-run / production launch).
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_CTX = threading.local()
+
+# Default logical->physical tables. `None` entries mean "replicated".
+# A rule value may be a string (one mesh axis) or a tuple of mesh axes.
+RULES_SINGLE_POD = {
+    "batch": "data",
+    "expert": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "d_ff": "model",
+    "d_inner": "model",
+    "vocab": "model",
+    "kv_seq": None,       # becomes "data" for long-context decode cells
+    "seq": None,
+    "d_model": None,
+    "code_blocks": "model",
+}
+RULES_MULTI_POD = dict(RULES_SINGLE_POD, batch=("pod", "data"))
+
+
+def rules_for(mesh: Mesh, *, seq_sharded_kv: bool = False) -> dict:
+    rules = dict(RULES_MULTI_POD if "pod" in mesh.axis_names else RULES_SINGLE_POD)
+    if seq_sharded_kv:
+        # long_500k: batch=1 -> shard the KV-cache sequence dim over `data`
+        rules["kv_seq"] = "data"
+        rules["batch"] = "pod" if "pod" in mesh.axis_names else None
+    return rules
+
+
+@contextmanager
+def use_rules(mesh: Optional[Mesh], rules: Optional[dict] = None):
+    prev = getattr(_CTX, "state", None)
+    if mesh is None:
+        _CTX.state = None
+    else:
+        _CTX.state = (mesh, rules if rules is not None else rules_for(mesh))
+    try:
+        yield
+    finally:
+        _CTX.state = prev
+
+
+def active_mesh() -> Optional[Mesh]:
+    st = getattr(_CTX, "state", None)
+    return st[0] if st else None
+
+
+def resolve_spec(axes) -> P:
+    """Map logical axis names to a PartitionSpec under the active rules."""
+    st = getattr(_CTX, "state", None)
+    if st is None:
+        return P()
+    _, rules = st
+    out = []
+    for a in axes:
+        if a is None:
+            out.append(None)
+        else:
+            out.append(rules.get(a))
+    return P(*out)
+
+
+def constrain(x, *axes):
+    """with_sharding_constraint by logical axes; no-op without active rules."""
+    st = getattr(_CTX, "state", None)
+    if st is None:
+        return x
+    mesh, _ = st
+    spec = resolve_spec(axes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(mesh: Mesh, rules: dict, axes) -> NamedSharding:
+    out = []
+    for a in axes:
+        out.append(None if a is None else rules.get(a))
+    return NamedSharding(mesh, P(*out))

@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: GF(p) matrix multiply (encode / syndrome).
+
+`w · H_G` (encode, paper Fig. 2(b)) and `Y' · H_Cᵀ` (syndrome, paper Eq. 3/5)
+are integer matmuls with a mod-p epilogue. The ASIC uses mux-based sparse
+routing; the TPU-idiomatic equivalent is a dense MXU matmul tiled 128×128 with
+the mod fused into the final K-step (DESIGN.md §3).
+
+Accumulation is exact int32; inputs are small integers (field symbols or
+centered lifts), far from overflow for K ≤ 2^20.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gf_matmul_kernel(a_ref, b_ref, o_ref, *, p: int, nk: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...].astype(jnp.int32)
+    b = b_ref[...].astype(jnp.int32)
+    o_ref[...] += jax.lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        o_ref[...] = o_ref[...] % p
+
+
+def gf_matmul_pallas(a: jnp.ndarray, b: jnp.ndarray, p: int, *,
+                     bm: int = 128, bn: int = 128, bk: int = 128,
+                     interpret: bool = True) -> jnp.ndarray:
+    """(a @ b) % p. a: (M, K) int, b: (K, N) int -> (M, N) int32.
+
+    The output block is revisited across the K grid dimension (accumulate in
+    VMEM, mod-p epilogue on the last step). Caller (`ops.gf_matmul`) pads
+    M/N/K to block multiples.
+    """
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0
+    nk = K // bk
+    kern = functools.partial(_gf_matmul_kernel, p=p, nk=nk)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.int32),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        grid=(M // bm, N // bn, nk),
+        interpret=interpret,
+    )(a, b)

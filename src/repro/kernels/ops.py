@@ -1,0 +1,181 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+Handle padding to tile multiples, backend dispatch (interpret=True everywhere
+except a real TPU), and expose drop-in callables for the core library:
+  - fbp_cn      : plugs into repro.core.decode.decode_llv(cn_fbp=...)
+  - gf_matmul   : encode / syndrome matmuls
+  - pim_mac     : quantized-MAC forward
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import fbp as _fbp
+from . import gf_matmul as _gfm
+from . import pim_mac as _pm
+from repro.core.llv import NEG_INF
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x, axis, multiple, value=0):
+    pad = (-x.shape[axis]) % multiple
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value), pad
+
+
+@functools.partial(jax.jit, static_argnames=("p", "tile_n", "interpret"))
+def fbp_cn(m_hat: jnp.ndarray, p: int, *, tile_n: int = _fbp.DEFAULT_TILE_N,
+           interpret: bool | None = None) -> jnp.ndarray:
+    """(N, dc, p) contribution-space messages -> reflected extrinsics."""
+    interpret = _interpret_default() if interpret is None else interpret
+    N = m_hat.shape[0]
+    tile = min(tile_n, max(8, N))
+    padded, pad = _pad_to(m_hat, 0, tile)
+    if pad:  # padded rows: identity messages (harmless)
+        fill = jnp.full((pad,) + m_hat.shape[1:], NEG_INF, m_hat.dtype)
+        fill = fill.at[..., 0].set(0.0)
+        padded = padded.at[N:].set(fill)
+    out = _fbp.fbp_cn_pallas(padded, p, tile_n=tile, interpret=interpret)
+    return out[:N]
+
+
+def fbp_cn_batched(m_hat: jnp.ndarray, p: int, **kw) -> jnp.ndarray:
+    """Adapter matching decode_llv's cn_fbp signature: (B, c, dc, p)."""
+    B, c, dc, pp = m_hat.shape
+    out = fbp_cn(m_hat.reshape(B * c, dc, pp), p, **kw)
+    return out.reshape(B, c, dc, pp)
+
+
+@functools.partial(jax.jit, static_argnames=("p", "bm", "bn", "bk", "interpret"))
+def gf_matmul(a: jnp.ndarray, b: jnp.ndarray, p: int, *, bm: int = 128,
+              bn: int = 128, bk: int = 128,
+              interpret: bool | None = None) -> jnp.ndarray:
+    """(a @ b) % p with padding to MXU-aligned blocks."""
+    interpret = _interpret_default() if interpret is None else interpret
+    M, K = a.shape
+    _, N = b.shape
+    bm_, bn_, bk_ = (min(bm, max(8, M)), min(bn, max(8, N)), min(bk, max(8, K)))
+    a, _ = _pad_to(a, 0, bm_)
+    a, _ = _pad_to(a, 1, bk_)
+    b, _ = _pad_to(b, 0, bk_)
+    b, _ = _pad_to(b, 1, bn_)
+    out = _gfm.gf_matmul_pallas(a, b, p, bm=bm_, bn=bn_, bk=bk_,
+                                interpret=interpret)
+    return out[:M, :N]
+
+
+@functools.partial(jax.jit, static_argnames=("row_parallelism", "adc_levels",
+                                             "bm", "bn", "interpret"))
+def pim_mac(x: jnp.ndarray, w: jnp.ndarray, *, row_parallelism: int = 0,
+            adc_levels: int = 0, bm: int = 128, bn: int = 128,
+            interpret: bool | None = None) -> jnp.ndarray:
+    """Row-group-quantized MAC (B, K) x (K, N) -> (B, N) int32."""
+    interpret = _interpret_default() if interpret is None else interpret
+    B, K = x.shape
+    _, N = w.shape
+    R = row_parallelism if row_parallelism > 0 else K
+    bm_, bn_ = min(bm, max(8, B)), min(bn, max(8, N))
+    x, _ = _pad_to(x, 0, bm_)
+    x, _ = _pad_to(x, 1, R)           # zero rows contribute clip(0)=0
+    w, _ = _pad_to(w, 0, R)
+    w, _ = _pad_to(w, 1, bn_)
+    out = _pm.pim_mac_pallas(x, w, row_parallelism=R, adc_levels=adc_levels,
+                             bm=bm_, bn=bn_, interpret=interpret)
+    return out[:B, :N]
+
+
+# ---------------------------------------------------------------------------
+# flash attention (fwd + bwd Pallas kernels, custom_vjp)
+# ---------------------------------------------------------------------------
+
+from . import flash_attention as _fa
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention(q, k, v, causal=True, window=0, softcap=0.0,
+                    scale=None, interpret=None):
+    """Flash attention with GQA. q: (B,Sq,Hq,D); k/v: (B,Skv,Hkv,D).
+    Returns (B,Sq,Hq,D) in q.dtype. O(S*D) HBM traffic (see kernel docs)."""
+    o, _ = _flash_fwd_rule(q, k, v, causal, window, softcap, scale, interpret)
+    return o
+
+
+def _fold(x):
+    B, S, H, D = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+
+
+def _unfold(x, B, H):
+    BH, S, D = x.shape
+    return x.reshape(B, H, S, D).transpose(0, 2, 1, 3)
+
+
+def _pad_seq(x, mult):
+    S = x.shape[1]
+    pad = (-S) % mult
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
+    return x, S
+
+
+def _flash_fwd_rule(q, k, v, causal, window, softcap, scale, interpret):
+    interpret = _interpret_default() if interpret is None else interpret
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    g = Hq // Hkv
+    sc = scale if scale is not None else 1.0 / (D ** 0.5)
+    bq = min(_fa.DEFAULT_BLOCK_Q, Sq)
+    bk = min(_fa.DEFAULT_BLOCK_KV, Skv)
+    qp, _ = _pad_seq(q, bq)
+    kp, _ = _pad_seq(k, bk)
+    vp, _ = _pad_seq(v, bk)
+    kv_len = Skv if kp.shape[1] != Skv else 0
+    o2, lse = _fa.flash_fwd(_fold(qp), _fold(kp), _fold(vp), g=g, scale=sc,
+                            causal=causal, window=window, softcap=softcap,
+                            bq=bq, bk=bk, kv_len=kv_len, interpret=interpret)
+    o = _unfold(o2, B, Hq)[:, :Sq]
+    return o, (q, k, v, o, lse[:, :Sq])
+
+
+def _flash_bwd_rule(causal, window, softcap, scale, interpret, res, do):
+    q, k, v, o, lse = res
+    interpret = _interpret_default() if interpret is None else interpret
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    g = Hq // Hkv
+    sc = scale if scale is not None else 1.0 / (D ** 0.5)
+    bq = min(_fa.DEFAULT_BLOCK_Q, Sq)
+    bk = min(_fa.DEFAULT_BLOCK_KV, Skv)
+    qp, _ = _pad_seq(q, bq)
+    kp, _ = _pad_seq(k, bk)
+    vp, _ = _pad_seq(v, bk)
+    op, _ = _pad_seq(o, bq)
+    dop, _ = _pad_seq(do, bq)
+    kv_len = Skv if kp.shape[1] != Skv else 0
+    Sqp = qp.shape[1]
+    lsep = lse
+    if Sqp != Sq:
+        lsep = jnp.pad(lse, ((0, 0), (0, Sqp - Sq)))
+    dq2, dk2, dv2 = _fa.flash_bwd(_fold(qp), _fold(kp), _fold(vp), _fold(op),
+                                  lsep, _fold(dop), g=g, scale=sc,
+                                  causal=causal, window=window,
+                                  softcap=softcap, bq=bq, bk=bk,
+                                  kv_len=kv_len, interpret=interpret)
+    Skvp = kp.shape[1]
+    dq = _unfold(dq2, B, Hq)[:, :Sq]
+    # dk/dv are per-q-head: sum each GQA group back to its kv head
+    dk = _unfold(dk2, B, Hq)[:, :Skv].reshape(B, Skv, Hkv, g, D).sum(3)
+    dv = _unfold(dv2, B, Hq)[:, :Skv].reshape(B, Skv, Hkv, g, D).sum(3)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_attention.defvjp(_flash_fwd_rule, _flash_bwd_rule)

@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Each function is the semantic ground truth its kernel is tested against
+(tests/test_kernels.py sweeps shapes/dtypes and asserts allclose).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.decode import _cn_fbp_jnp, maxplus_conv  # noqa: F401
+
+
+def fbp_cn_ref(m_hat: jnp.ndarray, p: int) -> jnp.ndarray:
+    """m_hat: (N, dc, p) contribution-space messages (padded slots already hold
+    the max-plus identity). Returns reflected extrinsic messages (N, dc, p)."""
+    # _cn_fbp_jnp expects (B, c, dc, p); fold N into (N, 1, dc, p)
+    out = _cn_fbp_jnp(m_hat[:, None], p)
+    return out[:, 0]
+
+
+def gf_matmul_ref(a: jnp.ndarray, b: jnp.ndarray, p: int) -> jnp.ndarray:
+    """(a @ b) mod p with exact int32 accumulation. a: (M, K), b: (K, N)."""
+    return (a.astype(jnp.int32) @ b.astype(jnp.int32)) % p
+
+
+def pim_mac_ref(x: jnp.ndarray, w: jnp.ndarray, *, row_parallelism: int,
+                adc_levels: int) -> jnp.ndarray:
+    """Row-grouped ADC-quantized MAC. x: (B, K), w: (K, N); K divisible by the
+    row-parallelism R. Partial sums of each R-row group are clipped to the ADC
+    range before digital accumulation."""
+    B, K = x.shape
+    R = row_parallelism if row_parallelism > 0 else K
+    assert K % R == 0
+    g = K // R
+    xg = x.astype(jnp.int32).reshape(B, g, R)
+    wg = w.astype(jnp.int32).reshape(g, R, w.shape[1])
+    partial = jnp.einsum("bgr,gro->bgo", xg, wg)
+    if adc_levels > 0:
+        half = adc_levels // 2
+        partial = jnp.clip(partial, -half, half)
+    return partial.sum(axis=1)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0,
+                        scale=None):
+    """Naive attention oracle. q: (B,Sq,Hq,D), k/v: (B,Skv,Hkv,D) -> like q.
+    fp32 math throughout."""
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / (D ** 0.5)
+    qf = q.astype(jnp.float32).reshape(B, Sq, Hkv, G, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k.astype(jnp.float32)) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(Sq)
+    kpos = jnp.arange(Skv)
+    ok = jnp.ones((Sq, Skv), bool)
+    if causal:
+        ok &= kpos[None, :] <= qpos[:, None]
+    if window:
+        ok &= kpos[None, :] > qpos[:, None] - window
+    s = jnp.where(ok, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, Hq, D)

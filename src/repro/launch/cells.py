@@ -1,0 +1,133 @@
+"""The (architecture x input-shape) grid: per-cell launch settings, skip
+logic, input ShapeDtypeStructs, and cell-specific sharding rules.
+
+40 assigned cells (10 archs x 4 shapes) + 2 paper_pim cells (the paper's own
+technique under serve load, used for §Perf hillclimbing).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, SHAPES, ShapeSpec, get_config
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import RULES_SINGLE_POD, RULES_MULTI_POD
+
+# archs too large for replicated-over-data storage: shard params over `data`
+# (FSDP) in addition to tensor parallelism over `model`
+_BIG = {"mistral_large_123b", "arctic_480b", "llama32_vision_90b"}
+# adafactor for the very large models (12B/param AdamW states do not fit)
+_ADAFACTOR = {"mistral_large_123b", "arctic_480b", "llama32_vision_90b",
+              "deepseek_coder_33b", "jamba_v01_52b"}
+
+
+@dataclasses.dataclass(frozen=True)
+class CellSettings:
+    microbatches: int = 8          # grad-accumulation chunks per train step
+    optimizer: str = "adamw"
+    fsdp_train: bool = True        # shard params over `data` during training
+    fsdp_serve: bool = False       # ... and during serving (huge models only)
+    remat: bool = True
+    notes: str = ""
+
+
+def settings_for(arch_id: str, shape: ShapeSpec) -> CellSettings:
+    opt = "adafactor" if arch_id in _ADAFACTOR else "adamw"
+    fsdp_serve = arch_id in _BIG
+    mb = 8
+    if shape.kind != "train":
+        mb = 1
+    return CellSettings(microbatches=mb, optimizer=opt,
+                        fsdp_train=True, fsdp_serve=fsdp_serve)
+
+
+def skip_reason(arch_id: str, shape: ShapeSpec) -> Optional[str]:
+    cfg = get_config(arch_id)
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return ("pure full-attention arch: no sub-quadratic mechanism for "
+                "524288-token decode (per brief; recorded in DESIGN.md)")
+    return None
+
+
+def list_cells(include_paper: bool = True):
+    cells = []
+    for a in ARCH_IDS:
+        for s in SHAPES.values():
+            cells.append((a, s.name))
+    if include_paper:
+        cells.append(("paper_pim", "prefill_32k"))
+        cells.append(("paper_pim", "decode_32k"))
+    return cells
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+
+def _aux_shape(cfg: ArchConfig, batch: int):
+    if not cfg.aux_kind:
+        return None
+    return jax.ShapeDtypeStruct((batch, cfg.n_aux_tokens, cfg.d_model),
+                                jnp.float32)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, object]:
+    """Model inputs for the cell's step function (train batch / prompt /
+    decode token). Cache/param specs come from eval_shape in steps.py."""
+    B, S = shape.global_batch, shape.seq_len
+    tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if shape.kind == "train":
+        d = {"tokens": tok, "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    elif shape.kind == "prefill":
+        d = {"tokens": tok}
+    else:  # decode: one new token against a seq_len-deep KV cache
+        d = {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+             "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+    aux = _aux_shape(cfg, B)
+    if aux is not None:
+        d["aux"] = aux
+    return d
+
+
+# ---------------------------------------------------------------------------
+# cell-specific sharding rules
+# ---------------------------------------------------------------------------
+
+
+def rules_for_cell(mesh, cfg: ArchConfig, shape: ShapeSpec,
+                   st: CellSettings) -> dict:
+    multi = "pod" in mesh.axis_names
+    rules = dict(RULES_MULTI_POD if multi else RULES_SINGLE_POD)
+    msize = mesh.shape["model"]
+
+    rules["heads_flat"] = "model"
+    # uneven vocabs (granite 49155, whisper 51865) cannot shard as jit args;
+    # replicate them (padding the table to a 256-multiple is a §Perf lever)
+    rules["vocab"] = "model" if cfg.vocab_size % msize == 0 else None
+    # kv projections/heads: shard only when the head count divides the axis
+    # (GQA with few KV heads replicates them — standard TP practice)
+    kv_div = cfg.n_kv_heads % msize == 0
+    rules["kv_flat"] = "model" if kv_div else None
+    rules["kv_heads"] = "model" if kv_div else None
+    rules["heads"] = "model" if cfg.n_heads % msize == 0 else None
+    rules["fsdp"] = "data" if (st.fsdp_train if shape.kind == "train"
+                               else st.fsdp_serve) else None
+
+    if shape.kind == "decode":
+        if shape.name == "long_500k":
+            rules["batch"] = None          # batch=1
+            # context parallelism: KV sequence over every idle axis
+            rules["kv_seq"] = (("pod", "data") if multi else ("data",))
+            if not kv_div:
+                rules["kv_seq"] = rules["kv_seq"] + ("model",)
+                rules["kv_heads"] = None
+        else:
+            # 32k-deep caches: batch over DP axes; KV seq over `model` when
+            # heads don't divide it (sequence/context parallel attention)
+            if not kv_div:
+                rules["kv_seq"] = "model"
+    return rules

@@ -1,0 +1,261 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+DOC = """Multi-pod dry-run: prove the distribution config is coherent on the
+production meshes without real hardware.
+
+For every (arch x shape) cell and each mesh (single-pod 16x16 = 256 chips,
+multi-pod 2x16x16 = 512 chips):
+  1. `jax.jit(step, in/out_shardings).lower(*ShapeDtypeStructs).compile()`
+     on the FULL config — sharding validation + memory_analysis;
+  2. reduced 1-group / 2-group lowerings under identical shardings —
+     FLOPs / bytes / collective-wire-bytes composed per costs.py;
+  3. JSON artifact per cell under results/dryrun/.
+
+Usage:
+  python -m repro.launch.dryrun --arch granite_3_2b --shape train_4k [--multi]
+  python -m repro.launch.dryrun --all [--jobs N]     # subprocess per cell
+"""
+
+import argparse
+import dataclasses
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def _cell_path(arch: str, shape: str, mesh_name: str) -> str:
+    return os.path.abspath(os.path.join(
+        RESULTS_DIR, f"{arch}__{shape}__{mesh_name}.json"))
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
+             skip_costs: bool = False, attn: str = "naive",
+             moe: str = "", pim_precoded: bool = False,
+             remat_policy: str = "", pim_mode: str = "") -> dict:
+    import jax
+    from repro.configs import SHAPES, get_config
+    from repro.distributed.sharding import use_rules
+    from repro.launch import costs as C
+    from repro.launch.cells import (input_specs, rules_for_cell, settings_for,
+                                    skip_reason)
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import build_step
+
+    shape = SHAPES[shape_name]
+    mesh_name = "multi" if multi_pod else "single"
+    out = {"arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+           "ok": False}
+
+    reason = skip_reason(arch_id, shape)
+    if reason:
+        out.update(ok=True, skipped=True, reason=reason)
+        return out
+
+    cfg = get_config(arch_id)
+    if attn == "flash":
+        # flash kernels execute on TPU; cost lowerings use the traffic-free
+        # stand-in + analytic kernel accounting (launch/costs.py)
+        cfg = dataclasses.replace(cfg, attn_impl="standin")
+    if moe:
+        cfg = dataclasses.replace(cfg, moe_impl=moe)
+    if pim_precoded and cfg.pim.enabled:
+        cfg = dataclasses.replace(
+            cfg, pim=dataclasses.replace(cfg.pim, precoded=True))
+    if remat_policy:
+        cfg = dataclasses.replace(cfg, remat_policy=remat_policy)
+    if pim_mode and cfg.pim.enabled:
+        cfg = dataclasses.replace(
+            cfg, pim=dataclasses.replace(cfg.pim, mode=pim_mode))
+    out_attn = attn
+    st = settings_for(arch_id, shape)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    nd = mesh.devices.size
+    rules = rules_for_cell(mesh, cfg, shape, st)
+    out["settings"] = dataclasses.asdict(st)
+    out["rules"] = {k: list(v) if isinstance(v, tuple) else v
+                    for k, v in rules.items()}
+
+    def lower_compile(cfg_v, tag, st_v=None):
+        fn, specs, sh_fn = build_step(cfg_v, st_v or st, shape)
+        in_sh, out_sh = sh_fn(mesh, rules)
+        t0 = time.time()
+        with use_rules(mesh, rules):
+            jf = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+            lowered = jf.lower(*specs)
+            compiled = lowered.compile()
+        dt = time.time() - t0
+        ca = compiled.cost_analysis() or {}
+        ma = compiled.memory_analysis()
+        txt = compiled.as_text()
+        colls = C.parse_collectives(txt, nd)
+        return {
+            "tag": tag,
+            "compile_s": round(dt, 2),
+            "flops_per_dev": float(ca.get("flops", 0.0)),
+            "bytes_per_dev": float(ca.get("bytes accessed", 0.0)),
+            "mem": {
+                "argument_bytes": ma.argument_size_in_bytes,
+                "output_bytes": ma.output_size_in_bytes,
+                "temp_bytes": ma.temp_size_in_bytes,
+                "alias_bytes": ma.alias_size_in_bytes,
+            },
+            "collectives": C.collective_summary(colls),
+            "coll_detail": [dataclasses.asdict(c) for c in colls[:200]],
+        }
+
+    try:
+        full = lower_compile(cfg, "full")
+        out["full"] = full
+        out["ok"] = True
+    except Exception as e:                                  # noqa: BLE001
+        out["error"] = f"{type(e).__name__}: {e}"
+        out["traceback"] = traceback.format_exc()[-4000:]
+        return out
+
+    if skip_costs:
+        return out
+
+    # ---- unrolled-group cost composition (per-device costs) ---------------
+    # Static HLO analysis counts `while` bodies once regardless of trip count
+    # (verified: scan(8 matmuls) == 1 matmul flops), so the cost variants are
+    # lowered with the group loop UNROLLED (n_groups <= 2, no while),
+    # microbatching off (flops are mb-invariant), and the Mamba time-chunk
+    # widened to the full sequence (associative_scan is plain HLO -> counted).
+    #   total(term) = u1(term) + (G - 1) * [u2(term) - u1(term)]
+    try:
+        import dataclasses as dc
+        G = cfg.n_groups
+        GE = cfg.encoder_groups
+        seq = shape.seq_len if shape.kind != "decode" else cfg.mamba_chunk
+        base = dict(unroll_groups=True,
+                    mamba_chunk=max(cfg.mamba_chunk, min(seq, 32768)))
+        st_cost = dc.replace(st, microbatches=1)
+        cfg1 = dc.replace(cfg, n_groups=1, encoder_groups=min(GE, 1), **base)
+        cfg2 = dc.replace(cfg, n_groups=2, encoder_groups=min(GE, 1), **base)
+        r1 = lower_compile(cfg1, "g1", st_cost)
+        r2 = lower_compile(cfg2, "g2", st_cost)
+        comp = {}
+        for term in ("flops_per_dev", "bytes_per_dev"):
+            comp[term] = C.compose_linear(r1[term], r2[term], G)
+        comp["collective_wire_bytes"] = C.compose_linear(
+            r1["collectives"]["total_wire_bytes"],
+            r2["collectives"]["total_wire_bytes"], G)
+        if attn == "flash":
+            fa_fl, fa_by = C.flash_attention_analytics(cfg, shape)
+            comp["flops_per_dev"] += fa_fl / nd
+            comp["bytes_per_dev"] += fa_by / nd
+            comp["flash_analytic_flops_per_dev"] = fa_fl / nd
+            comp["flash_analytic_bytes_per_dev"] = fa_by / nd
+        if GE > 1:
+            cfgE = dc.replace(cfg, n_groups=1, encoder_groups=2, **base)
+            rE = lower_compile(cfgE, "enc2", st_cost)
+            for term in ("flops_per_dev", "bytes_per_dev"):
+                comp[term] += (GE - 1) * max(rE[term] - r1[term], 0.0)
+            comp["collective_wire_bytes"] += (GE - 1) * max(
+                rE["collectives"]["total_wire_bytes"]
+                - r1["collectives"]["total_wire_bytes"], 0.0)
+        out["composed"] = comp
+        out["g1"] = {k: r1[k] for k in
+                     ("flops_per_dev", "bytes_per_dev", "collectives",
+                      "compile_s")}
+        out["g2"] = {k: r2[k] for k in
+                     ("flops_per_dev", "bytes_per_dev", "collectives",
+                      "compile_s")}
+    except Exception as e:                                  # noqa: BLE001
+        out["cost_error"] = f"{type(e).__name__}: {e}"
+        out["cost_traceback"] = traceback.format_exc()[-4000:]
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--missing-only", action="store_true")
+    ap.add_argument("--jobs", type=int, default=3)
+    ap.add_argument("--skip-costs", action="store_true")
+    ap.add_argument("--attn", default="naive", choices=["naive", "flash"])
+    ap.add_argument("--moe", default="", choices=["", "sorted_ep", "shard_ep"])
+    ap.add_argument("--pim-precoded", action="store_true")
+    ap.add_argument("--remat-policy", default="")
+    ap.add_argument("--pim-mode", default="")
+    args = ap.parse_args()
+
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+
+    if args.all:
+        from repro.launch.cells import list_cells
+        todo = []
+        for arch, shape in list_cells():
+            for multi in (False, True):
+                mesh_name = "multi" if multi else "single"
+                path = _cell_path(arch, shape, mesh_name)
+                if args.missing_only and os.path.exists(path):
+                    with open(path) as f:
+                        if json.load(f).get("ok"):
+                            continue
+                todo.append((arch, shape, multi))
+        print(f"{len(todo)} cells to run")
+        procs = []
+        while todo or procs:
+            while todo and len(procs) < args.jobs:
+                arch, shape, multi = todo.pop(0)
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch, "--shape", shape]
+                if multi:
+                    cmd.append("--multi")
+                # the roofline table is single-pod; multi-pod proves sharding
+                if args.skip_costs or multi:
+                    cmd.append("--skip-costs")
+                print("start", arch, shape, "multi" if multi else "single",
+                      flush=True)
+                procs.append((subprocess.Popen(cmd), arch, shape, multi))
+            still = []
+            for p, arch, shape, multi in procs:
+                if p.poll() is None:
+                    still.append((p, arch, shape, multi))
+                else:
+                    print("done", arch, shape,
+                          "multi" if multi else "single",
+                          "rc=", p.returncode, flush=True)
+            procs = still
+            time.sleep(2)
+        return
+
+    res = run_cell(args.arch, args.shape, args.multi,
+                   skip_costs=args.skip_costs, attn=args.attn, moe=args.moe,
+                   pim_precoded=args.pim_precoded,
+                   remat_policy=args.remat_policy, pim_mode=args.pim_mode)
+    res["attn"] = args.attn
+    mesh_name = "multi" if args.multi else "single"
+    suffix = "" if args.attn == "naive" else f"__{args.attn}"
+    if args.moe:
+        suffix += f"__{args.moe}"
+    if args.pim_precoded:
+        suffix += "__precoded"
+    if args.remat_policy:
+        suffix += f"__{args.remat_policy}"
+    if args.pim_mode:
+        suffix += f"__{args.pim_mode}"
+    path = _cell_path(args.arch, args.shape, mesh_name + suffix)
+    with open(path, "w") as f:
+        json.dump(res, f, indent=1)
+    status = ("SKIP" if res.get("skipped")
+              else "OK" if res["ok"] else "FAIL")
+    print(f"[{status}] {args.arch} {args.shape} {mesh_name}")
+    if not res["ok"]:
+        print(res.get("error"))
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

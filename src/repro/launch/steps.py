@@ -1,0 +1,199 @@
+"""Step builders: jit-able train / prefill / serve steps + their shardings.
+
+Everything the dry-run and the real drivers need:
+  build_train(cfg, st)  -> (step_fn, arg_specs, in_shardings, out_shardings)
+  build_prefill(cfg)    -> ...
+  build_serve(cfg)      -> ...
+
+Steps close over the config; arguments are pure pytrees so `.lower()` works
+with ShapeDtypeStructs. Parameter / optimizer-state / cache shardings are
+derived from the logical-axis trees in repro.models via the cell rules.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.core.context import PIMContext
+from repro.distributed.sharding import named_sharding, use_rules
+from repro.launch.cells import CellSettings, input_specs
+from repro.models import (cache_axes, decode_step, encode_params_for_pim,
+                          init_caches, init_params, loss_fn, param_axes,
+                          pim_param_axes, prefill)
+from repro.optim import make_optimizer, warmup_cosine
+
+
+def _shard_tree(mesh, rules, axes_tree):
+    return jax.tree.map(lambda ax: named_sharding(mesh, rules, ax), axes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def _replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+def opt_state_axes(opt_name: str, p_axes, p_shapes):
+    """Logical axes for the optimizer state, parallel to optim's state tree."""
+    if opt_name == "adamw":
+        return {"m": p_axes, "v": p_axes, "step": ()}
+
+    def st(ax, sds):
+        if len(sds.shape) >= 2:
+            return {"vr": tuple(ax[:-1]), "vc": tuple(ax[:-2]) + (ax[-1],)}
+        return {"v": tuple(ax)}
+
+    f = jax.tree.map(st, p_axes, p_shapes,
+                     is_leaf=lambda x: isinstance(x, tuple))
+    return {"f": f, "step": ()}
+
+
+# ---------------------------------------------------------------------------
+# training
+# ---------------------------------------------------------------------------
+
+
+def build_train(cfg: ArchConfig, st: CellSettings, shape: ShapeSpec,
+                mesh=None, rules=None, *, lr: float = 3e-4,
+                total_steps: int = 10000):
+    tx = make_optimizer(st.optimizer, warmup_cosine(lr, 200, total_steps))
+    mb = st.microbatches
+
+    def train_step(params, opt_state, batch):
+        def mb_loss(p, b):
+            return loss_fn(p, cfg, b)
+
+        if mb == 1:
+            loss, grads = jax.value_and_grad(mb_loss)(params, batch)
+        else:
+            def split(x):
+                return x.reshape((mb, x.shape[0] // mb) + x.shape[1:])
+
+            mbatch = jax.tree.map(split, batch)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def acc(carry, b):
+                g_acc, l_acc = carry
+                l, g = jax.value_and_grad(mb_loss)(params, b)
+                g_acc = jax.tree.map(lambda a, x: a + x.astype(jnp.float32),
+                                     g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            (grads, loss), _ = jax.lax.scan(acc, (zeros, 0.0), mbatch)
+            grads = jax.tree.map(lambda g: g / mb, grads)
+            loss = loss / mb
+
+        new_params, new_opt, gnorm = tx.update(grads, opt_state, params)
+        metrics = {"loss": loss, "grad_norm": gnorm}
+        return new_params, new_opt, metrics
+
+    # ---- specs & shardings -------------------------------------------------
+    p_axes = param_axes(cfg)
+    p_shapes = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    o_shapes = jax.eval_shape(tx.init, p_shapes)
+    o_axes = opt_state_axes(st.optimizer, p_axes, p_shapes)
+    batch_specs = input_specs(cfg, shape)
+
+    def shardings(mesh, rules):
+        p_sh = _shard_tree(mesh, rules, p_axes)
+        o_sh = _shard_tree(mesh, rules, o_axes)
+        b_sh = {"tokens": named_sharding(mesh, rules, ("batch", None)),
+                "labels": named_sharding(mesh, rules, ("batch", None))}
+        if "aux" in batch_specs:
+            b_sh["aux"] = named_sharding(mesh, rules, ("batch", None, None))
+        m_sh = {"loss": _replicated(mesh), "grad_norm": _replicated(mesh)}
+        return (p_sh, o_sh, b_sh), (p_sh, o_sh, m_sh)
+
+    arg_specs = (p_shapes, o_shapes, batch_specs)
+    return train_step, arg_specs, shardings, tx
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill & decode
+# ---------------------------------------------------------------------------
+
+
+def _maybe_ctx(cfg: ArchConfig) -> Optional[PIMContext]:
+    return PIMContext(cfg.pim) if cfg.pim.enabled else None
+
+
+def build_prefill(cfg: ArchConfig, shape: ShapeSpec):
+    ctx = _maybe_ctx(cfg)
+
+    def prefill_step(params, batch):
+        logits, caches = prefill(params, cfg, batch["tokens"],
+                                 aux=batch.get("aux"), pim_ctx=ctx)
+        return logits, caches
+
+    p_axes = param_axes(cfg)
+    if cfg.pim.enabled and cfg.pim.precoded:
+        p_axes = pim_param_axes(p_axes, cfg)
+        p_shapes = jax.eval_shape(lambda: encode_params_for_pim(
+            init_params(jax.random.PRNGKey(0), cfg), cfg))
+    else:
+        p_shapes = jax.eval_shape(
+            lambda: init_params(jax.random.PRNGKey(0), cfg))
+    batch_specs = input_specs(cfg, shape)
+    c_axes = cache_axes(cfg)
+
+    def shardings(mesh, rules):
+        p_sh = _shard_tree(mesh, rules, p_axes)
+        b_sh = {"tokens": named_sharding(mesh, rules, ("batch", None))}
+        if "aux" in batch_specs:
+            b_sh["aux"] = named_sharding(mesh, rules, ("batch", None, None))
+        lg_sh = named_sharding(mesh, rules, ("batch", None, "vocab"))
+        c_sh = _shard_tree(mesh, rules, c_axes)
+        return (p_sh, b_sh), (lg_sh, c_sh)
+
+    return prefill_step, (p_shapes, batch_specs), shardings
+
+
+def build_serve(cfg: ArchConfig, shape: ShapeSpec):
+    """One-token decode against a seq_len-deep cache."""
+    ctx = _maybe_ctx(cfg)
+
+    def serve_step(params, caches, batch):
+        logits, new_caches = decode_step(params, cfg, caches,
+                                         batch["tokens"], batch["pos"],
+                                         pim_ctx=ctx)
+        return logits, new_caches
+
+    p_axes = param_axes(cfg)
+    if cfg.pim.enabled and cfg.pim.precoded:
+        p_axes = pim_param_axes(p_axes, cfg)
+        p_shapes = jax.eval_shape(lambda: encode_params_for_pim(
+            init_params(jax.random.PRNGKey(0), cfg), cfg))
+    else:
+        p_shapes = jax.eval_shape(
+            lambda: init_params(jax.random.PRNGKey(0), cfg))
+    c_shapes = jax.eval_shape(
+        lambda: init_caches(cfg, shape.global_batch, shape.seq_len))
+    c_axes = cache_axes(cfg)
+    batch_specs = input_specs(cfg, shape)
+
+    def shardings(mesh, rules):
+        p_sh = _shard_tree(mesh, rules, p_axes)
+        c_sh = _shard_tree(mesh, rules, c_axes)
+        b_sh = {"tokens": named_sharding(mesh, rules, ("batch", None)),
+                "pos": _replicated(mesh)}
+        if "aux" in batch_specs:
+            b_sh["aux"] = named_sharding(mesh, rules, ("batch", None, None))
+        lg_sh = named_sharding(mesh, rules, ("batch", None, "vocab"))
+        return (p_sh, c_sh, b_sh), (lg_sh, c_sh)
+
+    return serve_step, (p_shapes, c_shapes, batch_specs), shardings
+
+
+def build_step(cfg: ArchConfig, st: CellSettings, shape: ShapeSpec):
+    """Dispatch on the shape kind. Returns (fn, arg_specs, shardings_fn)."""
+    if shape.kind == "train":
+        fn, specs, sh, _tx = build_train(cfg, st, shape)
+        return fn, specs, sh
+    if shape.kind == "prefill":
+        return build_prefill(cfg, shape)
+    return build_serve(cfg, shape)

@@ -1,0 +1,4 @@
+"""Config-driven model stacks (decoder-only / enc-dec / hybrid / SSM)."""
+from .lm import (init_params, param_axes, forward, loss_fn, init_caches,
+                 cache_axes, decode_step, prefill, encode_params_for_pim,
+                 pim_param_axes)

@@ -1,0 +1,565 @@
+"""Config-driven transformer / hybrid / SSM model stacks.
+
+One code path builds every assigned architecture from its `ArchConfig`:
+  - the stack is `n_groups` repetitions of `cfg.group_spec` (a tuple of
+    LayerSpec); parameters for each group position are *stacked* over
+    `n_groups` and the stack is executed with `lax.scan` (+ optional remat) —
+    compile time and HLO size stay O(group), not O(depth);
+  - layer kinds: "attn" (self- or cross-), "mamba" (selective SSM), "encdec"
+    (self + cross + MLP, whisper decoder); FFN is dense MLP, MoE, or
+    MoE+dense residual (arctic);
+  - enc-dec archs run a separate bidirectional encoder scan over precomputed
+    frame embeddings (modality frontend is a stub per the brief);
+  - PIM/NB-LDPC protection (the paper's technique) plugs in via `pim_ctx`:
+    target projections route through the protected quantized-MAC path.
+
+Entry points: init_params / param_axes / forward / loss_fn / init_caches /
+prefill / decode_step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, LayerSpec
+from repro.distributed.sharding import constrain
+from repro.nn import layers as L
+from repro.nn import moe as M
+from repro.nn import mamba as S
+from repro.nn.layers import CDT
+
+# ---------------------------------------------------------------------------
+# parameter construction
+# ---------------------------------------------------------------------------
+
+
+def _init_block(key, spec: LayerSpec, cfg: ArchConfig):
+    ks = jax.random.split(key, 8)
+    p: Dict[str, Any] = {"norm1": {"scale": jnp.ones((cfg.d_model,), jnp.float32)}}
+    if spec.kind == "mamba":
+        p["mamba"] = S.init_mamba(ks[0], cfg)
+    elif spec.kind == "encdec":
+        p["attn"] = L.init_attention(ks[0], cfg)
+        p["norm_x"] = {"scale": jnp.ones((cfg.d_model,), jnp.float32)}
+        p["xattn"] = L.init_attention(ks[1], cfg)
+    else:
+        p["attn"] = L.init_attention(ks[0], cfg)
+
+    has_ffn = spec.moe or (cfg.d_ff > 0 and spec.kind != "encdec_noffn")
+    if spec.kind == "mamba" and cfg.d_ff == 0 and not spec.moe:
+        has_ffn = False
+    if has_ffn:
+        p["norm2"] = {"scale": jnp.ones((cfg.d_model,), jnp.float32)}
+        if spec.moe:
+            p["moe"] = M.init_moe(ks[2], cfg, cfg.expert_d_ff or cfg.d_ff)
+            if spec.dense_residual:
+                p["mlp"] = L.init_mlp(ks[3], cfg.d_model, cfg.d_ff)
+        else:
+            p["mlp"] = L.init_mlp(ks[3], cfg.d_model, cfg.d_ff)
+    if spec.kind == "encdec":
+        p["norm2"] = {"scale": jnp.ones((cfg.d_model,), jnp.float32)}
+        p["mlp"] = L.init_mlp(ks[3], cfg.d_model, cfg.d_ff)
+    return p
+
+
+def _block_axes(spec: LayerSpec, cfg: ArchConfig):
+    """Logical sharding axes parallel to _init_block's tree."""
+    norm = {"scale": (None,)}
+    attn = {"wq": ("fsdp", "heads_flat"), "wk": ("fsdp", "kv_flat"),
+            "wv": ("fsdp", "kv_flat"), "wo": ("heads_flat", "fsdp")}
+    mlp = {"w_gate": ("fsdp", "d_ff"), "w_up": ("fsdp", "d_ff"),
+           "w_down": ("d_ff", "fsdp")}
+    a: Dict[str, Any] = {"norm1": norm}
+    if spec.kind == "mamba":
+        ma = S.mamba_param_axes()
+        ma = {k: tuple("fsdp" if ax == "d_model" else ax for ax in v)
+              for k, v in ma.items()}
+        a["mamba"] = ma
+    elif spec.kind == "encdec":
+        a["attn"] = attn
+        a["norm_x"] = norm
+        a["xattn"] = attn
+    else:
+        a["attn"] = attn
+    has_ffn = spec.moe or cfg.d_ff > 0
+    if spec.kind == "mamba" and cfg.d_ff == 0 and not spec.moe:
+        has_ffn = False
+    if has_ffn:
+        a["norm2"] = norm
+        if spec.moe:
+            a["moe"] = {"router": ("fsdp", None),
+                        "w_gate": ("expert", "fsdp", None),
+                        "w_up": ("expert", "fsdp", None),
+                        "w_down": ("expert", None, "fsdp")}
+            if spec.dense_residual:
+                a["mlp"] = mlp
+        else:
+            a["mlp"] = mlp
+    if spec.kind == "encdec":
+        a["norm2"] = norm
+        a["mlp"] = mlp
+    return a
+
+
+def init_params(key, cfg: ArchConfig):
+    keys = jax.random.split(key, 4 + len(cfg.group_spec))
+    s = 0.02
+    params: Dict[str, Any] = {
+        "embed": s * jax.random.normal(keys[0], (cfg.vocab_size, cfg.d_model),
+                                       jnp.float32),
+        "final_norm": {"scale": jnp.ones((cfg.d_model,), jnp.float32)},
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = s * jax.random.normal(
+            keys[1], (cfg.d_model, cfg.vocab_size), jnp.float32)
+
+    def stack_init(key, spec, n):
+        ks = jax.random.split(key, n)
+        return jax.vmap(lambda k: _init_block(k, spec, cfg))(ks)
+
+    params["groups"] = {
+        f"pos{i}": stack_init(keys[4 + i], spec, cfg.n_groups)
+        for i, spec in enumerate(cfg.group_spec)
+    }
+    if cfg.encoder_groups > 0:
+        enc_spec = LayerSpec(kind="attn")   # bidirectional handled at apply
+        params["encoder"] = stack_init(keys[2], enc_spec, cfg.encoder_groups)
+        params["enc_norm"] = {"scale": jnp.ones((cfg.d_model,), jnp.float32)}
+    return params
+
+
+def param_axes(cfg: ArchConfig):
+    axes: Dict[str, Any] = {
+        "embed": ("vocab", "fsdp"),
+        "final_norm": {"scale": (None,)},
+    }
+    if not cfg.tie_embeddings:
+        axes["lm_head"] = ("fsdp", "vocab")
+
+    def stacked(tree):
+        return jax.tree.map(lambda ax: (None,) + ax, tree,
+                            is_leaf=lambda x: isinstance(x, tuple))
+
+    axes["groups"] = {
+        f"pos{i}": stacked(_block_axes(spec, cfg))
+        for i, spec in enumerate(cfg.group_spec)
+    }
+    if cfg.encoder_groups > 0:
+        axes["encoder"] = stacked(_block_axes(LayerSpec(kind="attn"), cfg))
+        axes["enc_norm"] = {"scale": (None,)}
+    return axes
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+
+def _ffn(bp, spec: LayerSpec, cfg: ArchConfig, h, pim_ctx):
+    if spec.moe:
+        y = M.moe_apply(bp["moe"], h, cfg)
+        if spec.dense_residual:
+            y = y + L.mlp_apply(bp["mlp"], h, cfg.act, pim_ctx=pim_ctx)
+        return y
+    return L.mlp_apply(bp["mlp"], h, cfg.act, pim_ctx=pim_ctx)
+
+
+def _cross_kv(bp_attn, aux, cfg: ArchConfig):
+    """Compute cross-attention K/V from aux embeddings (B, Na, d)."""
+    B, Na, _ = aux.shape
+    aux = aux.astype(CDT)
+    k = (aux @ bp_attn["wk"].astype(CDT)).reshape(B, Na, cfg.n_kv_heads,
+                                                  cfg.head_dim)
+    v = (aux @ bp_attn["wv"].astype(CDT)).reshape(B, Na, cfg.n_kv_heads,
+                                                  cfg.head_dim)
+    return k, v
+
+
+def _apply_block(bp, x, spec: LayerSpec, cfg: ArchConfig, *, positions,
+                 aux=None, cache=None, cache_pos=None, pim_ctx=None):
+    """One block. Returns (x, new_cache)."""
+    new_cache: Dict[str, Any] = {}
+    if spec.kind == "mamba":
+        state = None
+        decode = cache is not None
+        if decode:
+            state = S.MambaState(cache["conv"], cache["ssm"])
+        y, st = S.mamba_apply(bp["mamba"], L.rmsnorm(bp["norm1"], x, cfg.norm_eps),
+                              cfg, state=state, decode=decode)
+        x = x + y
+        new_cache = {"conv": st.conv, "ssm": st.ssm}
+    elif spec.kind == "encdec":
+        h = L.rmsnorm(bp["norm1"], x, cfg.norm_eps)
+        kv = {"k": cache["k"], "v": cache["v"]} if cache is not None else None
+        y, nc = L.attention_apply(bp["attn"], h, LayerSpec(kind="attn"), cfg,
+                                  positions=positions, kv_cache=kv,
+                                  cache_pos=cache_pos, pim_ctx=pim_ctx)
+        x = x + y
+        if nc is not None:
+            new_cache.update(nc)
+        hx = L.rmsnorm(bp["norm_x"], x, cfg.norm_eps)
+        if cache is not None and "ck" in cache:
+            aux_kv = (cache["ck"], cache["cv"])
+        else:
+            aux_kv = _cross_kv(bp["xattn"], aux, cfg)
+        yx, _ = L.attention_apply(bp["xattn"], hx,
+                                  LayerSpec(kind="attn", cross=True), cfg,
+                                  positions=positions, aux_kv=aux_kv,
+                                  pim_ctx=pim_ctx)
+        x = x + yx
+        if cache is not None:
+            new_cache["ck"], new_cache["cv"] = aux_kv
+    else:
+        h = L.rmsnorm(bp["norm1"], x, cfg.norm_eps)
+        if spec.cross:
+            if cache is not None and "ck" in cache:
+                aux_kv = (cache["ck"], cache["cv"])
+            else:
+                aux_kv = _cross_kv(bp["attn"], aux, cfg)
+            y, _ = L.attention_apply(bp["attn"], h, spec, cfg,
+                                     positions=positions, aux_kv=aux_kv,
+                                     pim_ctx=pim_ctx)
+            if cache is not None:
+                new_cache["ck"], new_cache["cv"] = aux_kv
+        else:
+            kv = ({"k": cache["k"], "v": cache["v"]}
+                  if cache is not None else None)
+            y, nc = L.attention_apply(bp["attn"], h, spec, cfg,
+                                      positions=positions, kv_cache=kv,
+                                      cache_pos=cache_pos, pim_ctx=pim_ctx)
+            if nc is not None:
+                new_cache.update(nc)
+        x = x + y
+
+    if "norm2" in bp:
+        h = L.rmsnorm(bp["norm2"], x, cfg.norm_eps)
+        x = x + _ffn(bp, spec, cfg, h, pim_ctx)
+    return constrain(x, "batch", None, None), new_cache
+
+
+# ---------------------------------------------------------------------------
+# group iteration: lax.scan (production) or Python loop (cost lowerings —
+# static HLO analysis counts a `while` body once, so true FLOP/byte counts
+# need the unrolled graph; used only at n_groups <= 2)
+# ---------------------------------------------------------------------------
+
+
+def _remat(cfg, body):
+    if not cfg.remat:
+        return body
+    if cfg.remat_policy == "dots":
+        pol = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(body, policy=pol)
+    return jax.checkpoint(body)
+
+
+def _iter_groups(cfg: ArchConfig, body, carry, xs, n: int):
+    """scan-compatible: body(carry, xs_slice) -> (carry, ys_slice)."""
+    if not cfg.unroll_groups:
+        if cfg.remat:
+            body = _remat(cfg, body)
+        return jax.lax.scan(body, carry, xs)
+    ys = []
+    b = _remat(cfg, body) if cfg.remat else body
+    for g in range(n):
+        carry, y = b(carry, jax.tree.map(lambda t: t[g], xs))
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *t: jnp.stack(t), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+# ---------------------------------------------------------------------------
+# encoder (whisper) — bidirectional scan over precomputed frame embeddings
+# ---------------------------------------------------------------------------
+
+
+def _run_encoder(params, cfg: ArchConfig, aux):
+    positions = jnp.arange(aux.shape[1])
+
+    def body(x, bp):
+        h = L.rmsnorm(bp["norm1"], x, cfg.norm_eps)
+        y = L.encoder_attention_apply(bp["attn"], h, cfg, positions)
+        x = x + y.astype(CDT)
+        h = L.rmsnorm(bp["norm2"], x, cfg.norm_eps)
+        x = x + L.mlp_apply(bp["mlp"], h, cfg.act)
+        return constrain(x, "batch", None, None), None
+
+    x, _ = _iter_groups(cfg, body, aux.astype(CDT), params["encoder"],
+                        cfg.encoder_groups)
+    return L.rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# forward (training / prefill without caches)
+# ---------------------------------------------------------------------------
+
+
+def forward(params, cfg: ArchConfig, tokens, *, aux=None, pim_ctx=None):
+    """tokens: (B, S) int32; aux: (B, Na, d_model) modality embeddings.
+    Returns logits (B, S, V) float32."""
+    B, Stok = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(CDT)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, CDT)
+    x = constrain(x, "batch", None, None)
+    positions = jnp.arange(Stok)
+
+    enc_out = None
+    if cfg.encoder_groups > 0:
+        enc_out = _run_encoder(params, cfg, aux)
+        aux = enc_out                      # decoder cross-attends encoder out
+
+    def body(x, gp):
+        for i, spec in enumerate(cfg.group_spec):
+            x, _ = _apply_block(gp[f"pos{i}"], x, spec, cfg,
+                                positions=positions, aux=aux, pim_ctx=pim_ctx)
+        return x, None
+
+    x, _ = _iter_groups(cfg, body, x, params["groups"], cfg.n_groups)
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = (x @ head.astype(CDT)).astype(jnp.float32)
+    if cfg.softcap_final:
+        logits = cfg.softcap_final * jnp.tanh(logits / cfg.softcap_final)
+    return constrain(logits, "batch", None, "vocab")
+
+
+def loss_fn(params, cfg: ArchConfig, batch, *, pim_ctx=None):
+    """Causal-LM cross entropy. batch: tokens (B,S), labels (B,S) with -1 =
+    ignore; optional aux."""
+    logits = forward(params, cfg, batch["tokens"], aux=batch.get("aux"),
+                     pim_ctx=pim_ctx)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    lab = jnp.maximum(labels, 0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, lab[..., None], axis=-1)[..., 0]
+    tot = jnp.maximum(mask.sum(), 1.0)
+    return (nll * mask).sum() / tot
+
+
+# ---------------------------------------------------------------------------
+# caches: init / prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def _block_cache(spec: LayerSpec, cfg: ArchConfig, batch: int, max_seq: int,
+                 n_aux: int):
+    hkv, dh = cfg.n_kv_heads, cfg.head_dim
+    if spec.kind == "mamba":
+        return {"conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), CDT),
+                "ssm": jnp.zeros((batch, cfg.d_inner, cfg.d_state), jnp.float32)}
+    c: Dict[str, Any] = {}
+    if spec.kind == "encdec" or not spec.cross:
+        seq = max_seq
+        if spec.local_window:
+            seq = min(max_seq, spec.local_window)
+        c["k"] = jnp.zeros((batch, seq, hkv, dh), CDT)
+        c["v"] = jnp.zeros((batch, seq, hkv, dh), CDT)
+    if spec.kind == "encdec" or spec.cross:
+        c["ck"] = jnp.zeros((batch, n_aux, hkv, dh), CDT)
+        c["cv"] = jnp.zeros((batch, n_aux, hkv, dh), CDT)
+    return c
+
+
+def init_caches(cfg: ArchConfig, batch: int, max_seq: int):
+    """Stacked (over n_groups) cache pytree for decoding."""
+    n_aux = cfg.n_aux_tokens or 1
+
+    def rep(tree):
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_groups,) + x.shape).copy(), tree)
+
+    return {f"pos{i}": rep(_block_cache(spec, cfg, batch, max_seq, n_aux))
+            for i, spec in enumerate(cfg.group_spec)}
+
+
+def cache_axes(cfg: ArchConfig):
+    """Logical sharding axes for the cache pytree (parallel structure)."""
+    def ax_block(spec: LayerSpec):
+        if spec.kind == "mamba":
+            return {"conv": (None, "batch", None, "d_inner"),
+                    "ssm": (None, "batch", "d_inner", None)}
+        c = {}
+        if spec.kind == "encdec" or not spec.cross:
+            c["k"] = (None, "batch", "kv_seq", "kv_heads", None)
+            c["v"] = (None, "batch", "kv_seq", "kv_heads", None)
+        if spec.kind == "encdec" or spec.cross:
+            c["ck"] = (None, "batch", None, "kv_heads", None)
+            c["cv"] = (None, "batch", None, "kv_heads", None)
+        return c
+
+    return {f"pos{i}": ax_block(spec) for i, spec in enumerate(cfg.group_spec)}
+
+
+def decode_step(params, cfg: ArchConfig, caches, token, pos, *, aux=None,
+                pim_ctx=None):
+    """One-token decode. token: (B, 1) int32; pos: () int32 current position.
+    caches: stacked pytree from init_caches (cross entries must be filled by
+    prefill, or `aux` provided to compute them on the fly).
+    Returns (logits (B, 1, V), new_caches)."""
+    B = token.shape[0]
+    x = jnp.take(params["embed"], token, axis=0).astype(CDT)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, CDT)
+    positions = jnp.full((B, 1), pos, jnp.int32)
+
+    def body(x, xs):
+        gp, gc = xs
+        new_c = {}
+        for i, spec in enumerate(cfg.group_spec):
+            x, nc = _apply_block(gp[f"pos{i}"], x, spec, cfg,
+                                 positions=positions, aux=aux,
+                                 cache=gc[f"pos{i}"], cache_pos=pos,
+                                 pim_ctx=pim_ctx)
+            new_c[f"pos{i}"] = nc
+        return x, new_c
+
+    import dataclasses as _dc
+    cfg_nr = _dc.replace(cfg, remat=False)      # no remat in inference steps
+    x, new_caches = _iter_groups(cfg_nr, body, x, (params["groups"], caches),
+                                 cfg.n_groups)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = (x @ head.astype(CDT)).astype(jnp.float32)
+    if cfg.softcap_final:
+        logits = cfg.softcap_final * jnp.tanh(logits / cfg.softcap_final)
+    return constrain(logits, "batch", None, "vocab"), new_caches
+
+
+def prefill(params, cfg: ArchConfig, tokens, *, aux=None, pim_ctx=None):
+    """Run the full prompt, building decode caches. Returns (logits, caches).
+
+    The sequence axis is processed in full (scored prompt); caches are filled
+    by scattering K/V at all positions (self-attn) and computing cross K/V /
+    final mamba state.
+    """
+    B, Stok = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(CDT)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, CDT)
+    x = constrain(x, "batch", None, None)
+    positions = jnp.arange(Stok)
+
+    enc_out = None
+    if cfg.encoder_groups > 0:
+        enc_out = _run_encoder(params, cfg, aux)
+        aux = enc_out
+
+    hkv, dh = cfg.n_kv_heads, cfg.head_dim
+
+    def body(x, gp):
+        caches = {}
+        for i, spec in enumerate(cfg.group_spec):
+            cache_entry: Dict[str, Any] = {}
+            if spec.kind == "mamba":
+                h = L.rmsnorm(gp[f"pos{i}"]["norm1"], x, cfg.norm_eps)
+                y, st = S.mamba_apply(gp[f"pos{i}"]["mamba"], h, cfg)
+                x = x + y
+                if "norm2" in gp[f"pos{i}"]:
+                    h2 = L.rmsnorm(gp[f"pos{i}"]["norm2"], x, cfg.norm_eps)
+                    x = x + _ffn(gp[f"pos{i}"], spec, cfg, h2, pim_ctx)
+                cache_entry = {"conv": st.conv, "ssm": st.ssm}
+                x = constrain(x, "batch", None, None)
+            else:
+                bp = gp[f"pos{i}"]
+                # capture K/V by recomputing projections (cheap vs attention)
+                h = L.rmsnorm(bp["norm1"], x, cfg.norm_eps)
+                if spec.kind == "encdec" or not spec.cross:
+                    k = (h @ bp["attn"]["wk"].astype(CDT)).reshape(
+                        B, Stok, hkv, dh)
+                    v = (h @ bp["attn"]["wv"].astype(CDT)).reshape(
+                        B, Stok, hkv, dh)
+                    k = L.rope(k, positions, cfg.rope_theta)
+                    if spec.local_window and spec.local_window < Stok:
+                        # ring-buffer alignment: token at absolute position q
+                        # must sit at slot q % W (decode writes at pos % W)
+                        Wd = spec.local_window
+                        k = jnp.roll(k[:, -Wd:], Stok % Wd, axis=1)
+                        v = jnp.roll(v[:, -Wd:], Stok % Wd, axis=1)
+                    cache_entry["k"] = k
+                    cache_entry["v"] = v
+                if spec.kind == "encdec" or spec.cross:
+                    attn_p = bp["xattn"] if spec.kind == "encdec" else bp["attn"]
+                    ck, cv = _cross_kv(attn_p, aux, cfg)
+                    cache_entry["ck"], cache_entry["cv"] = ck, cv
+                x, _ = _apply_block(bp, x, spec, cfg, positions=positions,
+                                    aux=aux, pim_ctx=pim_ctx)
+            caches[f"pos{i}"] = cache_entry
+        return x, caches
+
+    x, caches = _iter_groups(cfg, body, x, params["groups"], cfg.n_groups)
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = (x @ head.astype(CDT)).astype(jnp.float32)
+    if cfg.softcap_final:
+        logits = cfg.softcap_final * jnp.tanh(logits / cfg.softcap_final)
+    return constrain(logits, "batch", None, "vocab"), caches
+
+
+# ---------------------------------------------------------------------------
+# PIM deployment: precoded weights (paper's deploy-time encode, Fig. 2(b))
+# ---------------------------------------------------------------------------
+
+
+def encode_params_for_pim(params, cfg: ArchConfig):
+    """Deploy-time transform: for every protected projection, store the
+    ternarized + NB-LDPC-encoded int8 weights (and the ternary scale) next
+    to the fp weights. Serving then reads only the encoded integers — the
+    paper's 'write-time encode': checks are generated when the array is
+    programmed, not per MAC."""
+    from repro.core.context import PIMContext
+    ctx = PIMContext(cfg.pim)
+    targets = set(cfg.pim.targets)
+
+    def enc_block(bp):
+        bp = dict(bp)
+        if "mlp" in bp and "mlp_down" in targets:
+            mlp = dict(bp["mlp"])
+            e, a = jax.vmap(ctx.encode_weight)(mlp["w_down"])
+            mlp["w_down_enc"], mlp["w_down_alpha"] = e, a
+            bp["mlp"] = mlp
+        if "attn" in bp and "attn_o" in targets:
+            at = dict(bp["attn"])
+            e, a = jax.vmap(ctx.encode_weight)(at["wo"])
+            at["wo_enc"], at["wo_alpha"] = e, a
+            bp["attn"] = at
+        return bp
+
+    params = dict(params)
+    params["groups"] = {k: enc_block(v) for k, v in params["groups"].items()}
+    return params
+
+
+def pim_param_axes(axes, cfg: ArchConfig):
+    """Logical axes for the encoded leaves (parallel to
+    encode_params_for_pim). Check columns ride inside each codeword block,
+    so the column dim stays unsharded — decode is shard-local (DESIGN §3)."""
+    targets = set(cfg.pim.targets)
+
+    def upd(block):
+        block = dict(block)
+        if "mlp" in block and "mlp_down" in targets:
+            m = dict(block["mlp"])
+            m["w_down_enc"] = (None, "d_ff", None)
+            m["w_down_alpha"] = (None,)
+            block["mlp"] = m
+        if "attn" in block and "attn_o" in targets:
+            a = dict(block["attn"])
+            a["wo_enc"] = (None, "heads_flat", None)
+            a["wo_alpha"] = (None,)
+            block["attn"] = a
+        return block
+
+    axes = dict(axes)
+    axes["groups"] = {k: upd(v) for k, v in axes["groups"].items()}
+    return axes

@@ -1,0 +1,6 @@
+"""NN substrate: attention/MLP/norm layers, MoE, Mamba blocks."""
+from .layers import (rmsnorm, rope, init_mlp, mlp_apply, init_attention,
+                     attention_apply, encoder_attention_apply, CDT)
+from .moe import init_moe, moe_apply, moe_dense, moe_sorted_ep
+from .mamba import (init_mamba, mamba_apply, init_mamba_state, MambaState,
+                    mamba_param_axes)

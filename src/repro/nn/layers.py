@@ -1,0 +1,217 @@
+"""Core NN layers: norms, MLPs, rotary embeddings, GQA attention
+(global / sliding-window / cross), logit soft-capping.
+
+Functional style: `init_*` builds param pytrees (fp32), `*_apply` are pure.
+Compute runs in bf16 with fp32 softmax/norm accumulation. Tensors are
+annotated with logical axes via repro.distributed.sharding.constrain.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, LayerSpec
+from repro.distributed.sharding import constrain
+
+ACTS = {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}
+CDT = jnp.bfloat16      # compute dtype
+
+
+def _norm_init(d):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(params, x, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"]).astype(CDT)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, theta):
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs      # (..., S, half)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU family)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model, d_ff):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s = 0.02
+    return {
+        "w_gate": s * jax.random.normal(k1, (d_model, d_ff), jnp.float32),
+        "w_up": s * jax.random.normal(k2, (d_model, d_ff), jnp.float32),
+        "w_down": s * jax.random.normal(k3, (d_ff, d_model), jnp.float32),
+    }
+
+
+def mlp_apply(params, x, act="silu", pim_ctx=None, layer_name=""):
+    a = ACTS[act]
+    g = x @ params["w_gate"].astype(CDT)
+    u = x @ params["w_up"].astype(CDT)
+    h = a(g) * u
+    h = constrain(h, "batch", None, "d_ff")
+    if pim_ctx is not None and f"{layer_name}mlp_down" in pim_ctx.targets:
+        y = pim_ctx.matmul(h, params["w_down"], "mlp_down",
+                           enc=params.get("w_down_enc"),
+                           alpha=params.get("w_down_alpha"))
+    else:
+        y = h @ params["w_down"].astype(CDT)
+    return constrain(y, "batch", None, None)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA; optional sliding window, soft-cap, cross-attention)
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ArchConfig):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d, hq, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    s = 0.02
+    return {
+        "wq": s * jax.random.normal(k1, (d, hq * dh), jnp.float32),
+        "wk": s * jax.random.normal(k2, (d, hkv * dh), jnp.float32),
+        "wv": s * jax.random.normal(k3, (d, hkv * dh), jnp.float32),
+        "wo": s * jax.random.normal(k4, (hq * dh, d), jnp.float32),
+    }
+
+
+def _softcap(logits, cap):
+    if cap and cap > 0:
+        return cap * jnp.tanh(logits / cap)
+    return logits
+
+
+def _attend(q, k, v, mask, softcap, *, impl="naive", causal=True, window=0):
+    """q: (B,Sq,Hq,D), k/v: (B,Skv,Hkv,D), mask: broadcastable (B,1,Sq,Skv).
+
+    impl="flash": dispatch to the Pallas flash kernel (mask expressed as
+    causal/window flags — O(S*D) HBM traffic). impl="standin": cost-lowering
+    placeholder with the same dataflow but no S^2 intermediates; the
+    attention-internal FLOPs/bytes are added analytically (launch/costs.py).
+    """
+    B, Sq, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    if impl == "flash" and Sq > 1:
+        from repro.kernels.ops import flash_attention
+        return flash_attention(q, k, v, causal, window,
+                               float(softcap or 0.0), None, None)
+    if impl == "standin" and Sq > 1:
+        # keeps gradients flowing to q/k/v (projection costs stay exact)
+        # while contributing ~zero attention-internal flops/bytes
+        km = k.mean(axis=1, keepdims=True).mean(axis=2, keepdims=True)
+        vm = v.mean(axis=1, keepdims=True).mean(axis=2, keepdims=True)
+        return q + (km + vm).astype(q.dtype)
+    qg = q.reshape(B, Sq, Hkv, G, D)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32)
+    logits = _softcap(logits / jnp.sqrt(D).astype(jnp.float32), softcap)
+    logits = jnp.where(mask[:, :, None] if mask is not None else True,
+                       logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(CDT)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w, v)
+    return out.reshape(B, Sq, Hq, D)
+
+
+def attention_apply(params, x, spec: LayerSpec, cfg: ArchConfig, *,
+                    positions, kv_cache=None, cache_pos=None, aux_kv=None,
+                    pim_ctx=None):
+    """Self- or cross-attention.
+
+    Training/prefill: kv_cache None -> causal full pass, returns (y, new_cache
+    or None). Decode: kv_cache dict {"k","v"} (B, Smax, Hkv, D) + cache_pos
+    scalar -> one-token update. Cross: aux_kv = precomputed (k, v).
+    """
+    B, S, _ = x.shape
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ params["wq"].astype(CDT)).reshape(B, S, hq, dh)
+    q = constrain(q, "batch", None, "heads", None)
+
+    new_cache = None
+    if spec.cross:
+        k, v = aux_kv                                  # precomputed, cached
+        mask = None
+    else:
+        k = (x @ params["wk"].astype(CDT)).reshape(B, S, hkv, dh)
+        v = (x @ params["wv"].astype(CDT)).reshape(B, S, hkv, dh)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        if kv_cache is not None:
+            # single-token decode: scatter into the cache. Sliding-window
+            # layers allocate the cache as a ring of size W = local_window and
+            # write at (pos % W); K carries *absolute* RoPE so relative
+            # offsets survive the wrap.
+            W = kv_cache["k"].shape[1]
+            slot = cache_pos % W if W < 2 ** 31 else cache_pos
+            ck = jax.lax.dynamic_update_slice_in_dim(kv_cache["k"], k.astype(CDT),
+                                                     slot, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(kv_cache["v"], v.astype(CDT),
+                                                     slot, axis=1)
+            ck = constrain(ck, "batch", "kv_seq", "kv_heads", None)
+            cv = constrain(cv, "batch", "kv_seq", "kv_heads", None)
+            new_cache = {"k": ck, "v": cv}
+            k, v = ck, cv
+            kv_pos = jnp.arange(W)
+            ok = kv_pos[None, :] <= cache_pos          # ring full => all True
+            if spec.local_window and spec.local_window < W:
+                ok &= kv_pos[None, :] > cache_pos - spec.local_window
+            mask = ok[:, None, :][None]                # (1,1,1,Skv) -> bcast
+            mask = jnp.broadcast_to(mask, (B, 1, S, W))
+        else:
+            qpos = jnp.arange(S)
+            kpos = jnp.arange(S)
+            ok = kpos[None, :] <= qpos[:, None]
+            if spec.local_window:
+                ok &= kpos[None, :] > qpos[:, None] - spec.local_window
+            if not getattr(spec, "causal", True):
+                ok = jnp.ones((S, S), bool)
+            mask = ok[None, None]
+    if spec.cross:
+        mask = None                                     # full visibility of aux
+
+    k = constrain(k, "batch", "kv_seq", "kv_heads", None)
+    v = constrain(v, "batch", "kv_seq", "kv_heads", None)
+    impl = cfg.attn_impl if (kv_cache is None) else "naive"
+    out = _attend(q, k, v, mask, cfg.softcap_attn, impl=impl,
+                  causal=(not spec.cross) and mask is not None,
+                  window=spec.local_window)
+    out = constrain(out, "batch", None, "heads", None)
+    out = out.reshape(B, S, hq * dh)
+    if pim_ctx is not None and "attn_o" in pim_ctx.targets:
+        y = pim_ctx.matmul(out, params["wo"], "attn_o",
+                           enc=params.get("wo_enc"),
+                           alpha=params.get("wo_alpha"))
+    else:
+        y = out @ params["wo"].astype(CDT)
+    return constrain(y, "batch", None, None), new_cache
+
+
+def encoder_attention_apply(params, x, cfg: ArchConfig, positions):
+    """Bidirectional self-attention (whisper encoder)."""
+    spec = LayerSpec(kind="attn")
+    B, S, _ = x.shape
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ params["wq"].astype(CDT)).reshape(B, S, hq, dh)
+    k = (x @ params["wk"].astype(CDT)).reshape(B, S, hkv, dh)
+    v = (x @ params["wv"].astype(CDT)).reshape(B, S, hkv, dh)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    out = _attend(q, k, v, None, cfg.softcap_attn, impl=cfg.attn_impl,
+                  causal=False)
+    return (out.reshape(B, S, hq * dh) @ params["wo"].astype(CDT))

@@ -1,0 +1,101 @@
+"""Mixture-of-Experts FFN.
+
+Two implementations sharing one parameter layout:
+  - "dense":     oracle — every expert processes every token, combine by gate
+                 weights. O(E) compute; only for tests/tiny configs.
+  - "sorted_ep": production — top-k routing, sort tokens by expert id, pack
+                 into an (E, capacity, d) buffer (experts sharded over the
+                 `model` mesh axis = expert parallelism), grouped GEMMs,
+                 unsort + weighted combine. Capacity-dropped tokens fall back
+                 to zero (standard dropping MoE).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import constrain
+from .layers import ACTS, CDT
+
+
+def init_moe(key, cfg: ArchConfig, d_ff: int):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d, E = cfg.d_model, cfg.n_experts
+    s = 0.02
+    return {
+        "router": s * jax.random.normal(k1, (d, E), jnp.float32),
+        "w_gate": s * jax.random.normal(k2, (E, d, d_ff), jnp.float32),
+        "w_up": s * jax.random.normal(k3, (E, d, d_ff), jnp.float32),
+        "w_down": s * jax.random.normal(k4, (E, d_ff, d), jnp.float32),
+    }
+
+
+def _route(params, x2d, cfg: ArchConfig):
+    logits = (x2d @ params["router"].astype(CDT)).astype(jnp.float32)
+    topv, topi = jax.lax.top_k(logits, cfg.top_k)
+    w = jax.nn.softmax(topv, axis=-1)
+    return topi.astype(jnp.int32), w.astype(CDT)
+
+
+def moe_dense(params, x2d, cfg: ArchConfig):
+    """Oracle: (T, d) -> (T, d) computing all experts."""
+    act = ACTS[cfg.act]
+    topi, w = _route(params, x2d, cfg)
+    g = jnp.einsum("td,edf->tef", x2d, params["w_gate"].astype(CDT))
+    u = jnp.einsum("td,edf->tef", x2d, params["w_up"].astype(CDT))
+    h = act(g) * u
+    y_all = jnp.einsum("tef,efd->ted", h, params["w_down"].astype(CDT))
+    T = x2d.shape[0]
+    sel = y_all[jnp.arange(T)[:, None], topi]           # (T, k, d)
+    return (w[..., None] * sel).sum(axis=1)
+
+
+def moe_sorted_ep(params, x2d, cfg: ArchConfig):
+    """Production path: sort-by-expert + capacity buffer + grouped GEMM."""
+    act = ACTS[cfg.act]
+    T, d = x2d.shape
+    E, K = cfg.n_experts, cfg.top_k
+    cap = max(1, int(T * K / E * cfg.capacity_factor))
+
+    topi, w = _route(params, x2d, cfg)                  # (T,K)
+    flat_e = topi.reshape(-1)                           # (T*K,)
+    order = jnp.argsort(flat_e)                         # stable
+    sorted_e = flat_e[order]
+    tok_of = order // K                                 # original token per slot
+
+    counts = jnp.bincount(flat_e, length=E)
+    starts = jnp.cumsum(counts) - counts                # exclusive prefix
+    pos_in_e = jnp.arange(T * K, dtype=jnp.int32) - starts[sorted_e]
+    keep = pos_in_e < cap
+    safe_pos = jnp.where(keep, pos_in_e, cap)           # dropped -> scratch row
+
+    # pack to (E, cap+1, d); scratch row `cap` absorbs capacity overflow
+    buf = jnp.zeros((E, cap + 1, d), CDT)
+    buf = buf.at[sorted_e, safe_pos].set(x2d[tok_of])
+    buf = constrain(buf, "expert", "batch", None)
+
+    g = jnp.einsum("ecd,edf->ecf", buf, params["w_gate"].astype(CDT))
+    u = jnp.einsum("ecd,edf->ecf", buf, params["w_up"].astype(CDT))
+    h = act(g) * u
+    h = constrain(h, "expert", "batch", None)   # d_ff unsharded: `model` is
+    yb = jnp.einsum("ecf,efd->ecd", h, params["w_down"].astype(CDT))
+    yb = constrain(yb, "expert", "batch", None)  # the expert-parallel axis
+
+    y_slots = yb[sorted_e, safe_pos]                    # (T*K, d)
+    y_slots = jnp.where(keep[:, None], y_slots, 0)
+    w_slots = w.reshape(-1)[order]
+    y = jnp.zeros((T, d), CDT).at[tok_of].add(w_slots[:, None] * y_slots)
+    return y
+
+
+def moe_apply(params, x, cfg: ArchConfig):
+    if cfg.moe_impl == "shard_ep":
+        from .moe_shard import moe_shard_apply
+        return constrain(moe_shard_apply(params, x, cfg),
+                         "batch", None, None)
+    B, S, d = x.shape
+    x2d = x.reshape(B * S, d)
+    fn = moe_dense if cfg.moe_impl == "dense" else moe_sorted_ep
+    y = fn(params, x2d, cfg)
+    return constrain(y.reshape(B, S, d), "batch", None, None)

@@ -1,0 +1,181 @@
+"""Optimizers and schedules (self-contained, optax-style API).
+
+- `adamw`: fp32 moments; the default.
+- `adafactor`: factored second moment — the memory-frugal choice for the
+  >=90B assigned architectures (DESIGN.md §5); optional (unfactored) momentum.
+- `warmup_cosine`: LR schedule.
+- `clip_by_global_norm` composes into both via the `clip` argument.
+
+A transform is a pair (init(params) -> state, update(grads, state, params)
+-> (new_params, new_state)). Updates are applied inside — the train step
+stays one call.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Transform(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple]
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  floor: float = 0.1) -> Callable:
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = step / jnp.maximum(warmup_steps, 1)
+        frac = (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+        frac = jnp.clip(frac, 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return peak_lr * jnp.where(step < warmup_steps, warm, cos)
+    return sched
+
+
+def constant_lr(lr: float) -> Callable:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def _global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_grads(grads, max_norm: float):
+    gn = _global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gn
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw(lr: Callable | float, *, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.01,
+          clip: float = 1.0) -> Transform:
+    sched = lr if callable(lr) else constant_lr(lr)
+
+    def init(params):
+        zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return {"m": zeros,
+                "v": jax.tree.map(jnp.zeros_like, zeros),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        if clip:
+            grads, gn = clip_grads(grads, clip)
+        else:
+            gn = _global_norm(grads)
+        step = state["step"] + 1
+        lr_t = sched(step)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            u = u + weight_decay * p.astype(jnp.float32)
+            return (p - lr_t * u).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        new_p = jax.tree.map(lambda t: t[0], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"m": new_m, "v": new_v, "step": step}, gn
+
+    return Transform(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment; Shazeer & Stern 2018)
+# ---------------------------------------------------------------------------
+
+
+def adafactor(lr: Callable | float, *, decay: float = 0.8, eps: float = 1e-30,
+              clip: float = 1.0, momentum: float = 0.0,
+              weight_decay: float = 0.0) -> Transform:
+    sched = lr if callable(lr) else constant_lr(lr)
+
+    def factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def st(p):
+            if factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros_like(p, jnp.float32)}
+        state = {"f": jax.tree.map(st, params), "step": jnp.zeros((), jnp.int32)}
+        if momentum:
+            state["m"] = jax.tree.map(
+                lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return state
+
+    def update(grads, state, params):
+        if clip:
+            grads, gn = clip_grads(grads, clip)
+        else:
+            gn = _global_norm(grads)
+        step = state["step"] + 1
+        lr_t = sched(step)
+        beta = 1.0 - step.astype(jnp.float32) ** (-decay)
+
+        def upd(p, g, f):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if factored(p):
+                vr = beta * f["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * f["vc"] + (1 - beta) * g2.mean(axis=-2)
+                denom = (vr[..., None] * vc[..., None, :]
+                         / jnp.maximum(vr.mean(axis=-1)[..., None, None], eps))
+                # zero-grad leaves (e.g. unrouted experts): rsqrt(0) = inf and
+                # 0 * inf = NaN -> clamp the denominator
+                u = g * jax.lax.rsqrt(jnp.maximum(denom, eps))
+                nf = {"vr": vr, "vc": vc}
+            else:
+                v = beta * f["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(jnp.maximum(v, eps))
+                nf = {"v": v}
+            # update clipping (RMS <= 1), per the paper
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-12)
+            u = u / jnp.maximum(1.0, rms)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p - lr_t * u).astype(p.dtype), nf
+
+        isdict = lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)
+        out = jax.tree.map(upd, params, grads, state["f"], is_leaf=None)
+        new_p = jax.tree.map(lambda t: t[0], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_f = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_state = {"f": new_f, "step": step}
+        if momentum:
+            m = jax.tree.map(lambda m, p0, p1: momentum * m + (p1 - p0),
+                             state["m"], params, new_p)
+            new_p = jax.tree.map(lambda p0, mm: (p0 + mm).astype(p0.dtype),
+                                 params, m)
+            new_state["m"] = m
+        return new_p, new_state, gn
+
+    return Transform(init, update)
+
+
+def make_optimizer(name: str, lr, **kw) -> Transform:
+    if name == "adamw":
+        return adamw(lr, **kw)
+    if name == "adafactor":
+        return adafactor(lr, **kw)
+    raise KeyError(f"unknown optimizer {name!r}")

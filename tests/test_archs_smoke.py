@@ -1,0 +1,107 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward +
+one train step on CPU, asserting output shapes and no NaNs (per the brief)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.base import ShapeSpec
+from repro.launch.cells import settings_for
+from repro.launch.steps import build_train
+from repro.models import (decode_step, forward, init_caches, init_params,
+                          loss_fn, prefill)
+
+ALL = ARCH_IDS + ["paper_pim"]
+
+
+def _setup(arch_id, B=2, S=16):
+    cfg = get_config(arch_id).reduced()
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg)
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    aux = None
+    if cfg.aux_kind:
+        aux = 0.1 * jax.random.normal(key, (B, cfg.n_aux_tokens, cfg.d_model),
+                                      jnp.float32)
+    return cfg, params, tokens, aux
+
+
+@pytest.mark.parametrize("arch_id", ALL)
+def test_forward_shapes_no_nans(arch_id):
+    cfg, params, tokens, aux = _setup(arch_id)
+    logits = forward(params, cfg, tokens, aux=aux)
+    assert logits.shape == (2, 16, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any())
+
+
+@pytest.mark.parametrize("arch_id", ALL)
+def test_one_train_step(arch_id):
+    cfg, params, tokens, aux = _setup(arch_id)
+    import dataclasses
+    shape = ShapeSpec("t", 16, 2, "train")
+    st = dataclasses.replace(settings_for(arch_id, shape), microbatches=2)
+    step, _, _, tx = build_train(cfg, st, shape, lr=1e-3)
+    opt = tx.init(params)
+    batch = {"tokens": tokens, "labels": tokens}
+    if aux is not None:
+        batch["aux"] = aux
+    new_params, new_opt, metrics = step(params, opt, batch)
+    loss = float(metrics["loss"])
+    assert np.isfinite(loss) and 0 < loss < 20
+    # params actually changed
+    delta = jax.tree.reduce(
+        lambda a, x: a + float(jnp.abs(x).sum()),
+        jax.tree.map(lambda a, b: a - b, new_params, params), 0.0)
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch_id", ALL)
+def test_prefill_decode_consistency(arch_id):
+    """decode_step at position S-1 with prefilled caches reproduces the last
+    prefill logit (exactness: same params, same math path). MoE archs use the
+    dense oracle: capacity dropping depends on the token count, which differs
+    between a prefill pass and a one-token decode by construction."""
+    import dataclasses
+    cfg, params, tokens, aux = _setup(arch_id)
+    if cfg.n_experts:
+        cfg = dataclasses.replace(cfg, moe_impl="dense")
+    S = tokens.shape[1]
+    lgs, caches = prefill(params, cfg, tokens, aux=aux)
+    lg2, _ = decode_step(params, cfg, caches, tokens[:, -1:],
+                         jnp.asarray(S - 1), aux=aux)
+    diff = float(jnp.max(jnp.abs(lgs[:, -1] - lg2[:, 0])))
+    tol = 0.05 if any(s.kind == "mamba" for s in cfg.group_spec) else 1e-3
+    assert diff <= tol, diff
+
+
+@pytest.mark.parametrize("arch_id", ["gemma2_27b"])
+def test_sliding_window_ring_buffer(arch_id):
+    """Decode past the window: ring buffer must keep only the last W tokens."""
+    cfg = get_config(arch_id).reduced()
+    import dataclasses
+    spec = tuple(dataclasses.replace(s, local_window=8) if s.local_window
+                 else s for s in cfg.group_spec)
+    cfg = dataclasses.replace(cfg, group_spec=spec)
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg)
+    caches = init_caches(cfg, 1, 8)        # window-sized ring for local layer
+    tok = jax.random.randint(key, (1, 1), 0, cfg.vocab_size)
+    for pos in range(12):                  # wraps past the ring size
+        logits, caches = decode_step(params, cfg, caches, tok, jnp.asarray(pos))
+        assert not bool(jnp.isnan(logits).any())
+
+
+def test_moe_capacity_paths():
+    cfg = get_config("olmoe_1b_7b").reduced()
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg)
+    tokens = jax.random.randint(key, (2, 8), 0, cfg.vocab_size)
+    import dataclasses
+    lg_ep = forward(params, cfg, tokens)
+    cfg_d = dataclasses.replace(cfg, moe_impl="dense")
+    lg_dense = forward(params, cfg_d, tokens)
+    # same routing; sorted_ep may drop at capacity — allow small deviation
+    corr = np.corrcoef(np.asarray(lg_ep, np.float32).ravel(),
+                       np.asarray(lg_dense, np.float32).ravel())[0, 1]
+    assert corr > 0.98

@@ -1,0 +1,67 @@
+"""NB-LDPC construction invariants: PEG graph, rank, systematic generator."""
+import numpy as np
+import pytest
+
+from repro.core import gf
+from repro.core.codes import REGISTRY as CODE_REGISTRY
+from repro.core.codes import get_code
+from repro.core.construction import build_code, peg_construct
+
+
+@pytest.mark.parametrize("n,k,p", [(32, 26, 3), (64, 51, 3), (40, 32, 3),
+                                   (48, 32, 5), (48, 32, 7)])
+def test_generator_orthogonality(n, k, p):
+    code = build_code(n, k, p=p)
+    assert code.H.shape == (n - k, n)
+    assert code.G.shape == (k, n)
+    assert not gf.gf_matmul_np(code.G, code.H.T, p).any()          # Eq. 2
+    assert gf.gf_rank(code.H, p) == n - k
+    # systematic: G = [I | P]
+    assert (code.G[:, :k] == np.eye(k)).all()
+
+
+def test_peg_degree_distribution():
+    n, c, dv = 60, 12, 3
+    H = peg_construct(n, c, dv, 3, seed=1)
+    assert ((H != 0).sum(axis=0) == dv).all()            # every VN degree dv
+    cn_deg = (H != 0).sum(axis=1)
+    assert cn_deg.max() - cn_deg.min() <= 2              # balanced CNs
+    assert set(np.unique(H)) <= {0, 1, 2}
+
+
+def test_edge_arrays_match_H():
+    code = build_code(64, 51, p=3)
+    for i in range(code.c):
+        vns = code.cn_vns[i][code.cn_mask[i]]
+        coefs = code.cn_coefs[i][code.cn_mask[i]]
+        assert (code.H[i, vns] == coefs).all()
+        assert (np.flatnonzero(code.H[i]) == np.sort(vns)).all()
+
+
+def test_perm_tables_invert():
+    code = build_code(64, 51, p=3)
+    p = code.p
+    # to_contrib then to_sym must round-trip the GF axis wherever mask is set
+    for i in range(code.c):
+        for j in range(code.dc_max):
+            if not code.cn_mask[i, j]:
+                continue
+            fwd = code.perm_to_contrib[i, j]
+            bwd = code.perm_to_sym[i, j]
+            assert sorted(fwd.tolist()) == list(range(p))
+            assert (fwd[bwd] == np.arange(p)).all()
+
+
+def test_registry_all_buildable():
+    for name, (n, k, p, dv) in CODE_REGISTRY.items():
+        if n > 512:
+            continue                                   # keep test fast
+        code = get_code(name)
+        assert code.n == n and code.k == k and code.p == p
+        assert abs(code.rate - k / n) < 1e-9
+
+
+def test_headline_code_rate():
+    # paper: >88% code rate at word length 1024
+    n, k, p, dv = CODE_REGISTRY["wl1024_r088"]
+    assert k / n > 0.88 and n == 1024

@@ -1,0 +1,138 @@
+"""Decoder behaviour: detection iff syndrome, t-error correction, max-plus
+convolution properties (hypothesis), early exit, Manhattan-vs-Gaussian LLV."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (decode_integers, decode_llv, encode_words, get_code,
+                        init_llv, maxplus_conv, syndrome)
+from repro.core.decode import _cn_fbp_jnp
+from repro.core.llv import circular_distance, reinterpret
+
+
+def _corrupt(rng, cw, n_err, mag=1):
+    y = np.asarray(cw).copy()
+    for b in range(y.shape[0]):
+        idx = rng.choice(y.shape[1], n_err, replace=False)
+        y[b, idx] += rng.choice([-mag, mag], n_err)
+    return jnp.asarray(y)
+
+
+@given(st.integers(0, 200))
+@settings(max_examples=20, deadline=None)
+def test_detection_iff_syndrome(seed):
+    rng = np.random.default_rng(seed)
+    code = get_code("wl40_r08")
+    w = jnp.asarray(rng.integers(0, code.p, (4, code.k)))
+    cw = encode_words(w, code)
+    assert not np.asarray(syndrome(cw, code)).any()      # clean => zero (Eq.3)
+    y = _corrupt(rng, cw, 1)
+    assert np.asarray(syndrome(y % code.p, code)).any()  # single err detected
+
+
+@given(st.integers(2, 7), st.integers(0, 50))
+@settings(max_examples=20, deadline=None)
+def test_maxplus_conv_commutes(p, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.normal(size=(3, p)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(3, p)).astype(np.float32))
+    ab = maxplus_conv(a, b, p)
+    ba = maxplus_conv(b, a, p)
+    np.testing.assert_allclose(np.asarray(ab), np.asarray(ba), rtol=1e-6)
+
+
+def test_maxplus_identity():
+    p = 5
+    e = jnp.full((1, p), -1e9).at[0, 0].set(0.0)
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(1, p)), jnp.float32)
+    np.testing.assert_allclose(np.asarray(maxplus_conv(x, e, p)),
+                               np.asarray(x), rtol=1e-6)
+
+
+@pytest.mark.parametrize("n_err,min_rate", [(1, 1.0), (2, 0.97), (3, 0.9)])
+def test_correction_rate(rng, n_err, min_rate):
+    code = get_code("wl160_r08")
+    B = 64
+    w = jnp.asarray(rng.integers(0, code.p, (B, code.k)))
+    cw = encode_words(w, code)
+    y = _corrupt(rng, cw, n_err)
+    y_corr, res = decode_integers(code, y, n_iters=10, damping=0.3)
+    ok = np.all(np.asarray(y_corr) == np.asarray(cw), axis=1).mean()
+    assert ok >= min_rate, f"{n_err} errors: corrected {ok:.3f} < {min_rate}"
+
+
+def test_eight_errors_wl1024():
+    # paper headline: up to 8 errors in a 1024-symbol word
+    rng = np.random.default_rng(1)
+    code = get_code("wl1024_r08")
+    B = 8
+    w = jnp.asarray(rng.integers(0, code.p, (B, code.k)))
+    cw = encode_words(w, code)
+    y = _corrupt(rng, cw, 8)
+    y_corr, _ = decode_integers(code, y, n_iters=12, damping=0.3)
+    ok = np.all(np.asarray(y_corr) == np.asarray(cw), axis=1).mean()
+    assert ok >= 0.7
+
+
+def test_early_exit_matches_fixed(rng):
+    code = get_code("wl40_r08")
+    w = jnp.asarray(rng.integers(0, code.p, (8, code.k)))
+    cw = encode_words(w, code)
+    y = _corrupt(rng, cw, 1)
+    a, ra = decode_integers(code, y, n_iters=8, early_exit=False)
+    b, rb = decode_integers(code, y, n_iters=8, early_exit=True)
+    assert (np.asarray(a) == np.asarray(b)).all()
+    assert int(rb.iterations) <= 8
+
+
+def test_clean_word_zero_iterations_effect(rng):
+    code = get_code("wl40_r08")
+    w = jnp.asarray(rng.integers(0, code.p, (4, code.k)))
+    cw = encode_words(w, code)
+    y_corr, res = decode_integers(code, cw, n_iters=6)
+    assert (np.asarray(y_corr) == np.asarray(cw)).all()
+    assert not np.asarray(res.detect_fail).any()
+
+
+def test_circular_distance_and_reinterpret():
+    p = 3
+    d = circular_distance(jnp.asarray([0.0, 1.0, 2.0, 3.0, -1.0]), p)
+    assert d.shape == (5, 3)
+    np.testing.assert_allclose(np.asarray(d[3]), [0, 1, 1])   # 3 ≡ 0 (mod 3)
+    # reinterpret moves to the NEAREST representative of the decoded residue
+    y = jnp.asarray([10, -4, 7])
+    dec = jnp.asarray([1, 0, 1])
+    out = reinterpret(y, dec, p)
+    assert out.tolist() == [10, -3, 7]
+
+
+def test_llv_modes_order():
+    # Gaussian init should be at least as good as Manhattan (paper: the
+    # simplification costs a little BER)
+    rng = np.random.default_rng(3)
+    code = get_code("wl160_r08")
+    B = 48
+    w = jnp.asarray(rng.integers(0, code.p, (B, code.k)))
+    cw = encode_words(w, code)
+    y = _corrupt(rng, cw, 4)
+    ok = {}
+    for mode in ("manhattan", "gaussian"):
+        yc, _ = decode_integers(code, y, n_iters=10, llv_mode=mode,
+                                damping=0.3)
+        ok[mode] = np.all(np.asarray(yc) == np.asarray(cw), axis=1).mean()
+    assert ok["gaussian"] >= ok["manhattan"] - 0.05
+
+
+def test_fbp_eliminates_self_information():
+    """External propagation must exclude the target slot's own message
+    (paper §3.2.2 step 2)."""
+    p = 3
+    rng = np.random.default_rng(0)
+    m = jnp.asarray(rng.normal(size=(1, 1, 4, p)).astype(np.float32))
+    ext = _cn_fbp_jnp(m, p)
+    m2 = m.at[0, 0, 2].set(jnp.asarray([100.0, -100.0, 0.0]))
+    ext2 = _cn_fbp_jnp(m2, p)
+    # slot 2's outgoing message is unchanged when slot 2's input changes
+    np.testing.assert_allclose(np.asarray(ext[0, 0, 2]),
+                               np.asarray(ext2[0, 0, 2]), rtol=1e-5)

@@ -1,0 +1,64 @@
+"""GF(p) arithmetic properties (hypothesis) + linear algebra mod p."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import gf
+
+PRIMES = [2, 3, 5, 7, 11]
+
+
+@given(st.sampled_from(PRIMES), st.integers(-100, 100), st.integers(-100, 100),
+       st.integers(-100, 100))
+@settings(max_examples=60, deadline=None)
+def test_field_axioms(p, a, b, c):
+    add, mul = gf.gf_add, gf.gf_mul
+    assert add(a, b, p) == add(b, a, p)
+    assert mul(a, b, p) == mul(b, a, p)
+    assert add(add(a, b, p), c, p) == add(a, add(b, c, p), p)
+    assert mul(mul(a, b, p), c, p) == mul(a, mul(b, c, p), p)
+    assert mul(a, add(b, c, p), p) == add(mul(a, b, p), mul(a, c, p), p)
+    assert add(a, gf.gf_neg(a, p), p) == 0
+
+
+@given(st.sampled_from(PRIMES), st.integers(1, 200))
+@settings(max_examples=60, deadline=None)
+def test_inverse(p, a):
+    if a % p == 0:
+        with pytest.raises(ZeroDivisionError):
+            gf.gf_inv(a, p)
+    else:
+        assert gf.gf_mul(a % p, gf.gf_inv(a, p), p) == 1
+
+
+@pytest.mark.parametrize("p", [2, 3, 5, 7])
+def test_tables(p):
+    mt = gf.mul_table(p)
+    assert mt.shape == (p, p)
+    assert (mt == mt.T).all()
+    inv = gf.inv_table(p)
+    for a in range(1, p):
+        assert (a * inv[a]) % p == 1
+
+
+@pytest.mark.parametrize("p", [2, 3, 5])
+def test_rref_rank_inverse(rng, p):
+    for _ in range(5):
+        n = int(rng.integers(2, 8))
+        m = rng.integers(0, p, (n, n))
+        r = gf.gf_rank(m, p)
+        assert 0 <= r <= n
+        if r == n:
+            inv = gf.gf_mat_inv(m, p)
+            assert (gf.gf_matmul_np(m, inv, p) == np.eye(n)).all()
+
+
+def test_centered_lift():
+    assert [int(gf.centered_lift(np.int64(k), 3)) for k in range(3)] == [0, 1, -1]
+    out = gf.centered_lift(np.arange(5), 5)
+    assert out.tolist() == [0, 1, 2, -2, -1]
+
+
+def test_is_prime():
+    assert [n for n in range(2, 20) if gf.is_prime(n)] == [2, 3, 5, 7, 11, 13,
+                                                           17, 19]

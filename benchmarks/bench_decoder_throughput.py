@@ -1,12 +1,26 @@
-"""Paper Fig. 5(b,c): decoder operating points.
+"""Paper Fig. 5(b,c): decoder operating points + engine throughput.
 
 Hardware Shmoo/power cannot be measured on CPU; we report
-  (a) MEASURED decode throughput of the JAX decoder on this host
-      (symbols/s and words/s vs batch, jnp path vs Pallas-interpret path),
+  (a) MEASURED decode throughput of the JAX decoder on this host across
+      engine paths:
+        jnp_ref       — seed Python-unrolled max-plus conv (baseline)
+        jnp_vec       — vectorized gather-table engine (default hot path)
+        jnp_vec_ee    — vectorized engine + per-codeword early exit
+        sharded       — jnp_vec_ee shard_map'd over all local devices
+        pallas_interpret — Pallas CN kernel in interpreter mode (semantics,
+                           not TPU speed)
   (b) MODELED power/efficiency across the prototype's 58-95 MHz frequency
-      range from the calibrated energy model — clearly labeled modeled."""
+      range from the calibrated energy model — clearly labeled modeled.
+
+CLI:  PYTHONPATH=src python -m benchmarks.bench_decoder_throughput
+        [--quick] [--json PATH]
+`--quick` is the CI smoke mode (small code, one batch); `--json` writes the
+rows for artifact upload / results tracking.
+"""
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
@@ -14,40 +28,84 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import decode_integers, encode_words, get_code
+from repro.core.decode import _cn_fbp_jnp_ref
+from repro.distributed.sharding import data_mesh, decode_sharded
 from repro.kernels.ops import fbp_cn_batched
 from .effmodel import PROTOTYPE, efficiency_mbps_per_w, power_w
 
 
-def _measure(code, B, n_iters=4, cn_fbp=None, reps=3):
+def _received_words(code, B):
     rng = np.random.default_rng(0)
     w = jnp.asarray(rng.integers(0, code.p, (B, code.k)), jnp.int32)
     y = np.asarray(encode_words(w, code)).copy()
     y[:, 1] += 1
-    y = jnp.asarray(y)
+    return jnp.asarray(y)
 
-    fn = jax.jit(lambda yy: decode_integers(code, yy, n_iters=n_iters,
-                                            cn_fbp=cn_fbp)[0])
+
+def _time(fn, y, reps=3):
     fn(y)[0].block_until_ready()                     # compile
     t0 = time.perf_counter()
     for _ in range(reps):
         fn(y)[0].block_until_ready()
-    dt = (time.perf_counter() - t0) / reps
-    return dt
+    return (time.perf_counter() - t0) / reps
+
+
+def _measure(code, B, n_iters=8, cn_fbp=None, early_exit=False, reps=3,
+             sharded=False):
+    y = _received_words(code, B)
+    if sharded:
+        mesh = data_mesh()
+        fn = jax.jit(lambda yy: decode_sharded(
+            code, yy, mesh=mesh, n_iters=n_iters, early_exit=early_exit,
+            cn_fbp=cn_fbp))
+    else:
+        fn = jax.jit(lambda yy: decode_integers(
+            code, yy, n_iters=n_iters, cn_fbp=cn_fbp, early_exit=early_exit))
+    return _time(fn, y, reps=reps)
+
+
+def _row(code_name, code, path, B, dt, n_iters, **extra):
+    return {"bench": "decoder_throughput", "path": path, "code": code_name,
+            "n": code.n, "p": code.p, "batch": B, "n_iters": n_iters,
+            "words_per_s": round(B / dt, 1),
+            "msymbols_per_s": round(B * code.n / dt / 1e6, 4), **extra}
+
+
+PATHS = [
+    ("jnp_ref", dict(cn_fbp=_cn_fbp_jnp_ref)),
+    ("jnp_vec", dict()),
+    ("jnp_vec_ee", dict(early_exit=True)),
+    ("sharded", dict(early_exit=True, sharded=True)),
+]
 
 
 def main(quick: bool = False):
     rows = []
-    code = get_code("chip256_r08")
-    for B in ([64] if quick else [16, 64, 256]):
-        dt = _measure(code, B)
-        rows.append({"bench": "decoder_throughput", "path": "jnp",
-                     "batch": B, "words_per_s": round(B / dt, 1),
-                     "msymbols_per_s": round(B * code.n / dt / 1e6, 3)})
-    dt = _measure(code, 64, cn_fbp=fbp_cn_batched)
-    rows.append({"bench": "decoder_throughput", "path": "pallas_interpret",
-                 "batch": 64, "words_per_s": round(64 / dt, 1),
-                 "note": "interpret mode exercises kernel semantics, not TPU "
-                         "speed"})
+    n_iters = 8
+    points = ([("wl160_r08", [64])] if quick else
+              [("chip256_r08", [64, 256]), ("wl1024_r08", [256])])
+    for code_name, batches in points:
+        code = get_code(code_name)
+        for B in batches:
+            base_dt = None
+            for path, kw in PATHS:
+                dt = _measure(code, B, n_iters=n_iters, **kw)
+                extra = ({"devices": len(jax.devices())}
+                         if path == "sharded" else {})
+                row = _row(code_name, code, path, B, dt, n_iters, **extra)
+                if path == "jnp_ref":
+                    base_dt = dt
+                else:
+                    row["speedup_vs_ref"] = round(base_dt / dt, 2)
+                rows.append(row)
+
+    # Pallas CN kernel (interpret mode exercises semantics, not TPU speed)
+    code = get_code("wl160_r08" if quick else "chip256_r08")
+    dt = _measure(code, 64, n_iters=n_iters, cn_fbp=fbp_cn_batched)
+    rows.append(_row("wl160_r08" if quick else "chip256_r08", code,
+                     "pallas_interpret", 64, dt, n_iters,
+                     note="interpret mode exercises kernel semantics, not "
+                          "TPU speed"))
 
     # modeled operating points across the measured Shmoo range
     for f in [58, 65, 71, 80, 88, 95]:
@@ -59,5 +117,18 @@ def main(quick: bool = False):
 
 
 if __name__ == "__main__":
-    for row in main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke mode: small code, one batch size")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write measurement rows as JSON")
+    args = ap.parse_args()
+    if args.json:        # fail fast on an unwritable path, not after minutes
+        with open(args.json, "a"):
+            pass
+    out = main(quick=args.quick)
+    for row in out:
         print(row)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=2)

@@ -3,9 +3,11 @@ from .construction import LDPCCode, build_code
 from .codes import get_code, REGISTRY as CODE_REGISTRY
 from .encode import (encode_words, encode_weight_matrix, syndrome,
                      np_encode_words)
-from .decode import decode_llv, decode_integers, DecodeResult, maxplus_conv
+from .decode import (decode_llv, decode_integers, DecodeResult, maxplus_conv,
+                     maxplus_conv_ref)
 from .llv import init_llv, reinterpret, circular_distance
 from .pim import PIMConfig, pim_mac
 from .protected import (ProtectionConfig, ProtectedResult,
-                        protected_pim_matmul, prepare_weights, strip_padding)
+                        protected_pim_matmul, prepare_weights, strip_padding,
+                        decode_stream)
 from .context import PIMContext

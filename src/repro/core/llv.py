@@ -11,6 +11,16 @@ import jax.numpy as jnp
 NEG_INF = -1e9
 
 
+def normalize_llv(x):
+    """Shift an LLV vector so its max entry is 0 (log-domain normalization).
+
+    Message-passing only ever compares LLV entries, so subtracting the
+    per-vector max changes nothing semantically while keeping magnitudes
+    bounded across decoder iterations (float32-safe for any n_iters).
+    """
+    return x - x.max(axis=-1, keepdims=True)
+
+
 def circular_distance(y, p: int):
     """d[..., k] = min_{z ≡ k (mod p)} |y - z| — the 1-D Manhattan distance of a
     received (integer or analog) value to the nearest representative of each

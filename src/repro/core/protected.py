@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from .construction import LDPCCode
-from .decode import decode_integers
+from .decode import DecodeResult, decode_integers
 from .encode import encode_weight_matrix, syndrome
 from .pim import PIMConfig, pim_mac
 
@@ -133,3 +133,59 @@ def protected_pim_matmul_budgeted(x: jnp.ndarray, W_enc: jnp.ndarray,
     uncorrected = detected & jnp.broadcast_to(overflow, detected.shape)
     data = yb.reshape(B, nb, code.n)[..., :code.k].reshape(B, nb * code.k)
     return ProtectedResult(data, detected, uncorrected)
+
+
+def decode_stream(code: LDPCCode, stream, *, chunk_size: int = 256,
+                  n_iters: int = 8, llv_scale: float = 4.0,
+                  llv_mode: str = "manhattan", early_exit: bool = True,
+                  damping: float = 0.0, cn_fbp=None, mesh=None):
+    """Streaming chunked decode for workloads larger than one dispatch.
+
+    `stream` is either a single (B, n) integer array — chunked internally
+    into `chunk_size`-word slices — or any iterable of (b_i, n) arrays
+    (b_i <= chunk_size). Yields one `(y_corrected, DecodeResult)` pair per
+    chunk, in order.
+
+    Every chunk is right-padded with all-zero words (valid codewords) to
+    exactly `chunk_size` before dispatch, so a SINGLE jitted executable
+    serves the whole stream — no per-chunk recompilation, including the
+    ragged tail. Results are sliced back to each chunk's true length.
+
+    With `mesh` set (a `jax.sharding.Mesh` with a "data" axis), each padded
+    chunk is additionally shard_map'd across the mesh devices via
+    `repro.distributed.sharding.decode_sharded`; `chunk_size` should then be
+    a multiple of the mesh size.
+    """
+    if hasattr(stream, "shape"):
+        arr = stream
+        stream = (arr[i:i + chunk_size]
+                  for i in range(0, arr.shape[0], chunk_size))
+
+    if mesh is not None:
+        from repro.distributed.sharding import decode_sharded
+
+        def run(yy):
+            return decode_sharded(code, yy, mesh=mesh, n_iters=n_iters,
+                                  llv_scale=llv_scale, llv_mode=llv_mode,
+                                  early_exit=early_exit, damping=damping,
+                                  cn_fbp=cn_fbp)
+    else:
+        def run(yy):
+            return decode_integers(code, yy, n_iters=n_iters,
+                                   llv_scale=llv_scale, llv_mode=llv_mode,
+                                   early_exit=early_exit, damping=damping,
+                                   cn_fbp=cn_fbp)
+
+    run = jax.jit(run)
+    for y in stream:
+        b = y.shape[0]
+        if b > chunk_size:
+            raise ValueError(f"chunk of {b} words exceeds chunk_size="
+                             f"{chunk_size}")
+        if b < chunk_size:
+            y = jnp.concatenate(
+                [y, jnp.zeros((chunk_size - b, y.shape[1]), y.dtype)], axis=0)
+        y_corr, res = run(y)
+        yield y_corr[:b], DecodeResult(res.symbols[:b], res.llv_totals[:b],
+                                       res.detect_fail[:b],
+                                       res.iterations[:b])

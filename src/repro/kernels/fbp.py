@@ -4,8 +4,14 @@ The ASIC runs one CN serially over its D_C incident LLV groups; the TPU analogue
 batches thousands of independent (codeword × CN) FBP problems across VPU lanes.
 
 Layout: messages (N, dc, p) float32 in contribution space. We tile N into VMEM
-blocks; dc and p are small compile-time constants, so the FM/BM chains and the
-cyclic max-plus convolutions fully unroll into vector ops over the N-tile.
+blocks; dc and p are small compile-time constants, so the FM/BM chains fully
+unroll into vector ops over whole (tile_n, p) blocks.
+
+The cyclic max-plus convolution over the GF axis is expressed as p static
+rolls of the (tile_n, p) block (each roll is a concat of two static slices —
+cheap lane shuffles on the VPU) followed by a broadcast add and running max,
+so every instruction operates on a full tile instead of p separate
+(tile_n,) vectors.
 
 The chain over dc is inherently serial (it IS the algorithm, paper Fig. 3(c));
 parallelism comes from the batch dimension, mirroring the paper's N_VI-way VN
@@ -24,35 +30,48 @@ from repro.core.llv import NEG_INF
 DEFAULT_TILE_N = 512
 
 
-def _conv(a, b, p):
-    """Cyclic max-plus convolution; a, b: tuples of p vectors (tile_n,)."""
-    out = []
-    for k in range(p):
-        acc = None
-        for j in range(p):
-            s = a[(k - j) % p] + b[j]
-            acc = s if acc is None else jnp.maximum(acc, s)
-        out.append(acc)
-    return tuple(out)
+def _roll_gf(a, j: int, p: int):
+    """roll(a, j) along the last (GF) axis with a static shift:
+    out[:, k] = a[:, (k - j) % p]."""
+    j = j % p
+    if j == 0:
+        return a
+    return jnp.concatenate([a[:, p - j:], a[:, :p - j]], axis=-1)
+
+
+def _conv_block(a, b, p: int):
+    """Cyclic max-plus convolution on whole (tile_n, p) blocks:
+    out[:, k] = max_j a[:, (k - j) % p] + b[:, j]."""
+    acc = a + b[:, 0:1]                       # j = 0 term
+    for j in range(1, p):
+        acc = jnp.maximum(acc, _roll_gf(a, j, p) + b[:, j:j + 1])
+    return acc
+
+
+def _reflect_block(x, p: int):
+    """out[:, k] = x[:, (-k) % p] — keep element 0, reverse elements 1..p-1."""
+    if p == 1:
+        return x
+    return jnp.concatenate([x[:, :1], jnp.flip(x[:, 1:], axis=-1)], axis=-1)
 
 
 def _fbp_kernel(m_ref, o_ref, *, dc: int, p: int):
-    # m_ref/o_ref: (tile_n, dc, p) VMEM blocks
-    msgs = [tuple(m_ref[:, t, k] for k in range(p)) for t in range(dc)]
+    # m_ref/o_ref: (tile_n, dc, p) VMEM blocks; slot messages are whole
+    # (tile_n, p) tiles
+    msgs = [m_ref[:, t, :] for t in range(dc)]
 
     fm = [msgs[0]]
     for t in range(1, dc):
-        fm.append(_conv(fm[-1], msgs[t], p))
+        fm.append(_conv_block(fm[-1], msgs[t], p))
     bm_rev = [msgs[dc - 1]]
     for t in range(dc - 2, -1, -1):
-        bm_rev.append(_conv(msgs[t], bm_rev[-1], p))
+        bm_rev.append(_conv_block(msgs[t], bm_rev[-1], p))
     bm = bm_rev[::-1]                      # bm[t] = conv of slots t..dc-1
 
-    shape = m_ref.shape[0:1]
-    ident = tuple(
-        jnp.zeros(shape, m_ref.dtype) if k == 0
-        else jnp.full(shape, NEG_INF, m_ref.dtype)
-        for k in range(p))
+    if dc == 1:
+        col = jax.lax.broadcasted_iota(jnp.int32, (m_ref.shape[0], p), 1)
+        ident = jnp.where(col == 0, jnp.zeros((), m_ref.dtype),
+                          jnp.full((), NEG_INF, m_ref.dtype))
 
     for t in range(dc):
         if t == 0:
@@ -60,10 +79,9 @@ def _fbp_kernel(m_ref, o_ref, *, dc: int, p: int):
         elif t == dc - 1:
             ext = fm[dc - 2]
         else:
-            ext = _conv(fm[t - 1], bm[t + 1], p)
-        # reflect: out[k] = ext[(-k) % p]   (sum of others must equal -u_t)
-        for k in range(p):
-            o_ref[:, t, k] = ext[(-k) % p]
+            ext = _conv_block(fm[t - 1], bm[t + 1], p)
+        # reflect: out[:, k] = ext[:, (-k) % p] (sum of others must equal -u_t)
+        o_ref[:, t, :] = _reflect_block(ext, p)
 
 
 def fbp_cn_pallas(m_hat: jnp.ndarray, p: int, *, tile_n: int = DEFAULT_TILE_N,

@@ -38,8 +38,14 @@ def fbp_cn(m_hat: jnp.ndarray, p: int, *, tile_n: int = _fbp.DEFAULT_TILE_N,
     """(N, dc, p) contribution-space messages -> reflected extrinsics."""
     interpret = _interpret_default() if interpret is None else interpret
     N = m_hat.shape[0]
-    tile = min(tile_n, max(8, N))
+    # pick the tile first, then derive the pad FROM the chosen tile so the
+    # padded batch is a tile multiple by construction (asserted below; the
+    # 8-row floor matches the float32 sublane minimum, so a smaller explicit
+    # tile_n is rounded up rather than honored)
+    tile = max(8, min(tile_n, N))
     padded, pad = _pad_to(m_hat, 0, tile)
+    assert padded.shape[0] % tile == 0, (
+        f"padded N={padded.shape[0]} not divisible by tile={tile}")
     if pad:  # padded rows: identity messages (harmless)
         fill = jnp.full((pad,) + m_hat.shape[1:], NEG_INF, m_hat.dtype)
         fill = fill.at[..., 0].set(0.0)

@@ -11,11 +11,21 @@ SINGLE_POD = (16, 16)                    # 256 chips
 MULTI_POD = (2, 16, 16)                  # 2 pods x 256 = 512 chips
 
 
+def compat_make_mesh(shape, axes):
+    """jax.make_mesh across jax versions: `axis_types` (and
+    `jax.sharding.AxisType`) only exist on newer jax; older releases have
+    exactly the Auto behavior, so dropping the argument is equivalent."""
+    try:
+        kinds = (jax.sharding.AxisType.Auto,) * len(shape)
+    except AttributeError:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=kinds)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = MULTI_POD if multi_pod else SINGLE_POD
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+    return compat_make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
@@ -23,5 +33,4 @@ def make_host_mesh(data: int = 1, model: int = 1):
     n = len(jax.devices())
     data = min(data, n)
     model = max(1, min(model, n // data))
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat_make_mesh((data, model), ("data", "model"))

@@ -105,7 +105,8 @@ def moe_shard_apply(params, x, cfg: ArchConfig):
     dp_axes = tuple(a for a in mesh.axis_names if a != "model")
 
     fn = functools.partial(_local_moe, cfg=cfg, ep=ep)
-    mapped = jax.shard_map(
+    from repro.distributed.sharding import compat_shard_map
+    mapped = compat_shard_map(
         fn, mesh=mesh,
         in_specs=(P(dp_axes, None),                # x2d: tokens over DP axes
                   P(),                             # router replicated
@@ -113,7 +114,6 @@ def moe_shard_apply(params, x, cfg: ArchConfig):
                   P("model", None, None),
                   P("model", None, None)),
         out_specs=P(dp_axes, None),
-        check_vma=False,
     )
     y = mapped(x.reshape(B * S, d).astype(CDT), params["router"],
                params["w_gate"], params["w_up"], params["w_down"])

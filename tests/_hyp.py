@@ -1,0 +1,93 @@
+"""Hypothesis import shim so the suite collects without the dependency.
+
+CI installs real `hypothesis` (see requirements.txt) and gets full
+property-based testing. In bare containers where it is absent, this module
+provides a deterministic drop-in subset: `@given` expands each strategy into
+a fixed pseudo-random sample grid (seeded, so runs are reproducible) and
+invokes the test once per sample tuple. Only the strategy surface the test
+suite actually uses is implemented (`st.integers`, `st.sampled_from`).
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # deterministic fallback sampler
+    import inspect
+    import itertools
+
+    import numpy as _np
+
+    HAVE_HYPOTHESIS = False
+    _FALLBACK_EXAMPLES = 5
+
+    class _IntStrategy:
+        def __init__(self, lo: int, hi: int):
+            self.lo, self.hi = lo, hi
+
+        def sample(self, rng, k: int):
+            span = self.hi - self.lo + 1
+            if span <= k:
+                return list(range(self.lo, self.hi + 1))
+            picks = {self.lo, self.hi}
+            while len(picks) < k:
+                picks.add(int(rng.integers(self.lo, self.hi + 1)))
+            return sorted(picks)
+
+    class _ChoiceStrategy:
+        def __init__(self, options):
+            self.options = list(options)
+
+        def sample(self, rng, k: int):
+            if len(self.options) <= k:
+                return list(self.options)
+            idx = rng.choice(len(self.options), size=k, replace=False)
+            return [self.options[i] for i in sorted(idx)]
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _IntStrategy:
+            return _IntStrategy(min_value, max_value)
+
+        @staticmethod
+        def sampled_from(options) -> _ChoiceStrategy:
+            return _ChoiceStrategy(options)
+
+    st = _Strategies()
+
+    def given(*strategies):
+        """Bind strategies to the test's trailing parameters (hypothesis
+        semantics) and expand them into a deterministic sample product.
+
+        The wrapper's visible signature drops the bound parameters so pytest
+        does not mistake them for fixtures; remaining leading parameters
+        (e.g. the `rng` fixture) pass through untouched.
+        """
+        def deco(fn):
+            sig = inspect.signature(fn)
+            params = list(sig.parameters.values())
+            bound = params[len(params) - len(strategies):]
+            names = [p.name for p in bound]
+
+            def wrapper(*args, **kwargs):
+                rng = _np.random.default_rng(0)
+                grids = [s.sample(rng, _FALLBACK_EXAMPLES) for s in strategies]
+                for values in itertools.product(*grids):
+                    call_kwargs = dict(kwargs)
+                    call_kwargs.update(zip(names, values))
+                    fn(*args, **call_kwargs)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            wrapper.__signature__ = sig.replace(
+                parameters=params[:len(params) - len(strategies)])
+            return wrapper
+        return deco
+
+    def settings(**_kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]

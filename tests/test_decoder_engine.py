@@ -1,0 +1,210 @@
+"""High-throughput decoder engine: vectorized max-plus conv vs seed reference,
+converged-mask early exit, streaming decode, sharded decode (2-device CPU mesh
+via subprocess), and the fbp_cn tile/pad regression."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+
+from repro.core import (decode_integers, decode_stream, encode_words,
+                        get_code, maxplus_conv, maxplus_conv_ref)
+from repro.core.decode import _cn_fbp_jnp, _cn_fbp_jnp_ref
+from repro.distributed.sharding import data_mesh, decode_sharded
+
+
+# ---------------------------------------------------------------------------
+# vectorized max-plus conv == seed reference
+# ---------------------------------------------------------------------------
+
+@given(st.sampled_from([3, 5, 7]), st.integers(0, 100))
+@settings(max_examples=30, deadline=None)
+def test_maxplus_conv_vectorized_matches_ref(p, seed):
+    rng = np.random.default_rng(seed)
+    shape = tuple(rng.integers(1, 5, size=rng.integers(1, 4))) + (p,)
+    a = jnp.asarray(rng.normal(size=shape).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=shape).astype(np.float32))
+    np.testing.assert_array_equal(np.asarray(maxplus_conv(a, b, p)),
+                                  np.asarray(maxplus_conv_ref(a, b, p)))
+
+
+@given(st.sampled_from([3, 5, 7]), st.integers(1, 12), st.integers(0, 50))
+@settings(max_examples=25, deadline=None)
+def test_cn_fbp_vectorized_matches_ref(p, dc, seed):
+    rng = np.random.default_rng(seed)
+    m = jnp.asarray(rng.normal(size=(2, 3, dc, p)).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(_cn_fbp_jnp(m, p)),
+                               np.asarray(_cn_fbp_jnp_ref(m, p)), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# per-codeword early exit
+# ---------------------------------------------------------------------------
+
+def _corrupted_words(rng, code, B, n_err):
+    w = jnp.asarray(rng.integers(0, code.p, (B, code.k)))
+    cw = np.asarray(encode_words(w, code))
+    y = cw.copy()
+    for b in range(B):
+        idx = rng.choice(y.shape[1], n_err, replace=False)
+        y[b, idx] += rng.choice([-1, 1], n_err)
+    return jnp.asarray(y), cw
+
+
+def test_early_exit_equivalent_on_correctable_words(rng):
+    code = get_code("wl160_r08")
+    y, cw = _corrupted_words(rng, code, 16, 1)
+    a, ra = decode_integers(code, y, n_iters=10, damping=0.3)
+    b, rb = decode_integers(code, y, n_iters=10, damping=0.3, early_exit=True)
+    assert (np.asarray(a) == cw).all()
+    assert (np.asarray(b) == cw).all()
+    assert not np.asarray(rb.detect_fail).any()
+    # fixed path reports the full budget for every codeword
+    assert (np.asarray(ra.iterations) == 10).all()
+    # early exit reports per-codeword convergence iterations within budget
+    assert rb.iterations.shape == (16,)
+    assert (np.asarray(rb.iterations) <= 10).all()
+    assert (np.asarray(rb.iterations) >= 1).all()
+
+
+def test_early_exit_mixed_batch_freezes_converged(rng):
+    """A hard straggler must not perturb already-converged codewords."""
+    code = get_code("wl160_r08")
+    y_easy, cw = _corrupted_words(rng, code, 4, 1)
+    alone, r_alone = decode_integers(code, y_easy, n_iters=12, damping=0.3,
+                                     early_exit=True)
+    # mix in a heavily corrupted straggler that keeps the loop running
+    y_hard = np.asarray(cw[:1]).copy()
+    y_hard[0, ::3] += 1
+    y_mix = jnp.concatenate([y_easy, jnp.asarray(y_hard)], axis=0)
+    mixed, r_mix = decode_integers(code, y_mix, n_iters=12, damping=0.3,
+                                   early_exit=True)
+    # frozen outputs: easy words identical whether or not a straggler rides
+    assert (np.asarray(mixed[:4]) == np.asarray(alone)).all()
+    assert (np.asarray(r_mix.iterations[:4]) ==
+            np.asarray(r_alone.iterations)).all()
+    assert int(r_mix.iterations[4]) >= int(r_mix.iterations[:4].max())
+
+
+# ---------------------------------------------------------------------------
+# streaming decode
+# ---------------------------------------------------------------------------
+
+def test_decode_stream_matches_batch(rng):
+    code = get_code("wl40_r08")
+    y, cw = _corrupted_words(rng, code, 22, 1)     # ragged tail: 22 = 8+8+6
+    full, _ = decode_integers(code, y, n_iters=8, damping=0.3,
+                              early_exit=True)
+    outs = list(decode_stream(code, y, chunk_size=8, n_iters=8, damping=0.3))
+    got = np.concatenate([np.asarray(yc) for yc, _ in outs], axis=0)
+    assert [yc.shape[0] for yc, _ in outs] == [8, 8, 6]
+    assert (got == np.asarray(full)).all()
+    for yc, res in outs:
+        assert res.iterations.shape == (yc.shape[0],)
+        assert res.detect_fail.shape == (yc.shape[0],)
+
+
+def test_decode_stream_iterable_and_oversize(rng):
+    code = get_code("wl40_r08")
+    y, _ = _corrupted_words(rng, code, 6, 1)
+    chunks = [y[:3], y[3:]]
+    got = np.concatenate(
+        [np.asarray(yc) for yc, _ in
+         decode_stream(code, iter(chunks), chunk_size=4, n_iters=6,
+                       damping=0.3)], axis=0)
+    full, _ = decode_integers(code, y, n_iters=6, damping=0.3,
+                              early_exit=True)
+    assert (got == np.asarray(full)).all()
+    with pytest.raises(ValueError):
+        next(decode_stream(code, iter([y]), chunk_size=4))
+
+
+# ---------------------------------------------------------------------------
+# sharded decode
+# ---------------------------------------------------------------------------
+
+def test_decode_sharded_single_device_matches(rng):
+    code = get_code("wl40_r08")
+    y, cw = _corrupted_words(rng, code, 7, 1)      # odd B exercises padding
+    base, rbase = decode_integers(code, y, n_iters=8, damping=0.3)
+    mesh = data_mesh()
+    out, res = decode_sharded(code, y, mesh=mesh, n_iters=8, damping=0.3)
+    # sharded decode must be exactly the single-device computation
+    assert (np.asarray(out) == np.asarray(base)).all()
+    assert (np.asarray(res.detect_fail) == np.asarray(rbase.detect_fail)).all()
+    assert res.detect_fail.shape == (7,)
+    assert res.iterations.shape == (7,)
+    # decode quality rides along: whatever the plain decoder corrected,
+    # the sharded one corrected too
+    assert ((np.asarray(out) == cw).all(axis=1) ==
+            (np.asarray(base) == cw).all(axis=1)).all()
+
+
+_SHARDED_2DEV_SCRIPT = textwrap.dedent("""
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+    assert len(jax.devices()) == 2, jax.devices()
+    from repro.core import decode_integers, encode_words, get_code
+    from repro.distributed.sharding import data_mesh, decode_sharded
+
+    rng = np.random.default_rng(0)
+    code = get_code("wl40_r08")
+    w = jnp.asarray(rng.integers(0, code.p, (9, code.k)))
+    cw = np.asarray(encode_words(w, code))
+    y = cw.copy()
+    for b in range(9):
+        idx = rng.choice(code.n, 1)
+        y[b, idx] += 1
+    y = jnp.asarray(y)
+    base, rbase = decode_integers(code, y, n_iters=8, damping=0.3,
+                                  early_exit=True)
+    out, res = decode_sharded(code, y, mesh=data_mesh(), n_iters=8,
+                              damping=0.3, early_exit=True)
+    assert (np.asarray(out) == np.asarray(base)).all()
+    assert (np.asarray(res.iterations) == np.asarray(rbase.iterations)).all()
+    assert res.iterations.shape == (9,)
+    print("SHARDED-2DEV-OK")
+""")
+
+
+def test_decode_sharded_two_device_cpu_mesh():
+    """decode_sharded over a 2-device CPU mesh == single-device decode.
+
+    Runs in a subprocess because the host device count is fixed at jax
+    import time (conftest must not set XLA_FLAGS globally).
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        " --xla_force_host_platform_device_count=2").strip()
+    env["JAX_PLATFORMS"] = "cpu"
+    src = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+    env["PYTHONPATH"] = os.path.abspath(src) + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", _SHARDED_2DEV_SCRIPT],
+                          capture_output=True, text=True, env=env,
+                          timeout=600)
+    assert proc.returncode == 0, proc.stderr
+    assert "SHARDED-2DEV-OK" in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# fbp_cn tile/pad regression
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("N,tile_n", [(3, 512), (7, 8), (12, 8), (100, 64),
+                                      (70, 512)])
+def test_fbp_cn_awkward_batches(rng, N, tile_n):
+    """Tile must divide the padded batch for every (N, tile_n) combination."""
+    from repro.kernels import ops, ref
+    p, dc = 3, 5
+    m = jnp.asarray(rng.normal(size=(N, dc, p)).astype(np.float32))
+    out = ops.fbp_cn(m, p, tile_n=tile_n)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.fbp_cn_ref(m, p)),
+                               rtol=1e-6, atol=1e-6)

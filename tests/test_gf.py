@@ -1,7 +1,8 @@
 """GF(p) arithmetic properties (hypothesis) + linear algebra mod p."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hyp import given, settings, st
 
 from repro.core import gf
 

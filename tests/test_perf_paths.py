@@ -63,8 +63,8 @@ from repro.distributed.sharding import use_rules
 
 cfg = get_config("olmoe_1b_7b").reduced(n_experts=8)
 cfg = dataclasses.replace(cfg, top_k=2, capacity_factor=8.0)
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.launch.mesh import compat_make_mesh
+mesh = compat_make_mesh((2, 4), ("data", "model"))
 key = jax.random.PRNGKey(0)
 params = init_moe(key, cfg, 32)
 rng = np.random.default_rng(0)

@@ -7,7 +7,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hyp import given, settings, st
 
 from repro import checkpoint as ckpt
 from repro.core.baselines import HammingSECDED, ModuloParity, SuccessiveCorrection
@@ -203,10 +204,9 @@ def test_constrain_is_noop_without_mesh():
 
 
 def test_resolve_spec_with_rules():
-    import jax
     from jax.sharding import PartitionSpec as P
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import compat_make_mesh
+    mesh = compat_make_mesh((1, 1), ("data", "model"))
     with use_rules(mesh, {"batch": "data", "d_ff": "model", "kv_seq": None}):
         assert resolve_spec(("batch", None, "d_ff")) == P("data", None, "model")
         assert resolve_spec(("kv_seq",)) == P(None)

@@ -32,6 +32,7 @@ from repro.core.decode import _cn_fbp_jnp_ref
 from repro.distributed.sharding import data_mesh, decode_sharded
 from repro.kernels.ops import fbp_cn_batched
 from .effmodel import PROTOTYPE, efficiency_mbps_per_w, power_w
+from .rows import DEFAULT_PATH, append_rows
 
 
 def _received_words(code, B):
@@ -122,6 +123,8 @@ if __name__ == "__main__":
                     help="CI smoke mode: small code, one batch size")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write measurement rows as JSON")
+    ap.add_argument("--rows", default=DEFAULT_PATH, metavar="PATH",
+                    help="append standardized rows here ('' disables)")
     args = ap.parse_args()
     if args.json:        # fail fast on an unwritable path, not after minutes
         with open(args.json, "a"):
@@ -132,3 +135,5 @@ if __name__ == "__main__":
     if args.json:
         with open(args.json, "w") as f:
             json.dump(out, f, indent=2)
+    if args.rows:
+        append_rows(args.rows, "decoder_throughput", out)

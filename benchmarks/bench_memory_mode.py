@@ -1,0 +1,136 @@
+"""Memory-mode benchmark: `ProtectedMemoryArray` write/read/scrub throughput
+per controller policy, plus the paper-style BER-improvement campaign
+(the 59.65x-class comparison: NB-LDPC vs Hamming SECDED vs modulo checksum
+vs unprotected under the ±1 cell-error channel).
+
+CLI:  PYTHONPATH=src python -m benchmarks.bench_memory_mode
+        [--quick] [--json PATH] [--rows PATH]
+
+`--quick` is the CI smoke mode (small code, few trials). `--json` writes the
+full output; `--rows` (default results/bench_rows.json, '' to disable)
+appends standardized rows for the machine-readable perf trajectory.
+
+The acceptance point: the smallest raw BER at which Hamming SECDED has
+saturated (improvement <= 3x — double-bit errors dominate); there the
+NB-LDPC wl1024 improvement over unprotected must be >= 10x.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.memory import (ProtectedMemoryArray, asymmetric_adjacent,
+                          paper_schemes, run_campaign, select_acceptance_row)
+from repro.core import get_code
+
+from .rows import DEFAULT_PATH, append_rows
+
+
+def _throughput_rows(code_name: str, mbytes: float, eps: float,
+                     chunk_size: int):
+    """Write / clean-read / corrupted-read / scrub timings per policy."""
+    nbytes = int(mbytes * 2 ** 20)
+    rng = np.random.default_rng(0)
+    payload = rng.integers(0, 256, nbytes, np.uint8)
+    noise = asymmetric_adjacent(3, eps, eps)
+    rows = []
+    for policy in ("basic", "writeback", "scrub"):
+        mem = ProtectedMemoryArray(code_name, controller=policy,
+                                   chunk_size=chunk_size)
+        if policy == "scrub":
+            mem.controller.interval = 10 ** 9        # explicit scrubs only
+
+        t0 = time.perf_counter()
+        mem.write("blob", payload)
+        t_write = time.perf_counter() - t0
+        n_words = mem.stored("blob").enc.shape[0]
+
+        t0 = time.perf_counter()
+        out = mem.read("blob")
+        t_clean = time.perf_counter() - t0
+        assert np.array_equal(out, payload)
+
+        mem.inject(noise, key=jax.random.PRNGKey(1))
+        t0 = time.perf_counter()
+        out = mem.read("blob")
+        t_dirty = time.perf_counter() - t0
+        assert np.array_equal(out, payload), f"{policy}: corrupted read wrong"
+
+        mem.inject(noise, key=jax.random.PRNGKey(2))
+        rep = mem.scrub()
+
+        st = mem.stats
+        for op, dt in (("write", t_write), ("read_clean", t_clean),
+                       ("read_corrupted", t_dirty)):
+            rows.append({
+                "section": "throughput", "policy": policy, "op": op,
+                "code": code_name, "mbytes": round(mbytes, 3),
+                "mbytes_per_s": round(mbytes / dt, 3),
+                "words_per_s": round(n_words / dt, 1),
+            })
+        rows.append({
+            "section": "throughput", "policy": policy, "op": "scrub",
+            "code": code_name, "words_scanned": rep["words_scanned"],
+            "flagged": rep["flagged"], "corrected": rep["corrected"],
+            "uncorrectable": rep["uncorrectable"],
+            "mcells_per_s": round(rep["bandwidth_cells_per_s"] / 1e6, 3),
+            "detected_total": st.detected, "corrected_total": st.corrected,
+            "writebacks": st.writebacks,
+        })
+    return rows
+
+
+def _campaign_rows(code_name: str, raw_bers, trials: int,
+                   hamming_trials: int):
+    code = get_code(code_name)
+    out = run_campaign(paper_schemes(code), raw_bers, trials=trials,
+                       hamming_trials=hamming_trials)
+    rows = [{"section": "ber_campaign", "code": code_name, **r}
+            for r in out["rows"]]
+    acc = select_acceptance_row(out["rows"])
+    if acc is not None:
+        rows.append({"section": "acceptance", "code": code_name, **acc,
+                     "pass": bool(acc["nbldpc_improvement"] >= 10.0)})
+    return rows
+
+
+def main(quick: bool = False):
+    if quick:
+        tput = _throughput_rows("wl160_r08", mbytes=0.125, eps=1e-3,
+                                chunk_size=128)
+        camp = _campaign_rows("wl256_r08", [1e-2, 1e-3, 1e-4],
+                              trials=16, hamming_trials=512)
+    else:
+        tput = _throughput_rows("wl1024_r08", mbytes=4.0, eps=1e-4,
+                                chunk_size=256)
+        camp = _campaign_rows(
+            "wl1024_r08",
+            [3e-2, 2e-2, 1e-2, 5e-3, 2e-3, 1e-3, 3e-4, 1e-4, 1e-5],
+            trials=64, hamming_trials=4096)
+    return tput + camp
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke mode: small code, few trials")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write measurement rows as JSON")
+    ap.add_argument("--rows", default=DEFAULT_PATH, metavar="PATH",
+                    help="append standardized rows here ('' disables)")
+    args = ap.parse_args()
+    if args.json:        # fail fast on an unwritable path, not after minutes
+        with open(args.json, "a"):
+            pass
+    out = main(quick=args.quick)
+    for row in out:
+        print(row)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=2, default=str)
+    if args.rows:
+        append_rows(args.rows, "memory_mode", out)

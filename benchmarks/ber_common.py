@@ -1,67 +1,58 @@
-"""Shared BER-measurement machinery.
-
-Direct Monte-Carlo at raw BER 1e-5 would need ~10^8 decoded symbols to see a
-single residual error, so we use the standard semi-analytic decomposition:
-
-    post_BER(eps) = sum_m  Binom(n, eps, m) * r(m)
-
-where r(m) = E[fraction of symbols still wrong after decoding | exactly m
-injected symbol errors], estimated by conditional Monte-Carlo per m. This is
-exact in expectation, covers every raw BER with ONE set of decode runs, and
-matches how the paper's own low-BER points must have been produced
-(their Fig. 6 reaches 1.7e-7).
+"""Compat shim: the semi-analytic BER machinery now lives in
+`repro.memory.campaign` (library-grade, any scheme x any channel). This
+module keeps the original helper signatures for existing benchmarks and
+scripts, and additionally reports residuals over **info symbols** (the
+paper's figures quote data BER) via `info=True` / `ber_curves`.
 """
 from __future__ import annotations
 
-import math
-
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import decode_integers, encode_words, get_code
+from repro.memory.campaign import (NBLDPCScheme, binom_pmf,  # noqa: F401
+                                   conditional_residual_profile,
+                                   mix_post_ber)
+from repro.memory.channel import PlusMinusOne
+
+__all__ = ["conditional_residuals", "binom_pmf", "post_ber", "ber_curve",
+           "ber_curves"]
+
+
+def _profile(code, max_errors, trials, n_iters, damping, seed, llv_mode):
+    scheme = NBLDPCScheme(code, PlusMinusOne(0.0, p_field=code.p),
+                          n_iters=n_iters, damping=damping,
+                          llv_mode=llv_mode)
+    return conditional_residual_profile(scheme, max_errors=max_errors,
+                                        trials=trials, seed=seed)
 
 
 def conditional_residuals(code, max_errors: int = 12, trials: int = 128,
                           n_iters: int = 12, damping: float = 0.3,
-                          seed: int = 0, llv_mode: str = "manhattan"):
-    """r[m] for m = 0..max_errors; r[m] = mean residual symbol error rate
-    after decoding words with exactly m random ±1 integer errors."""
-    rng = np.random.default_rng(seed)
-    r = np.zeros(max_errors + 1)
-    for m in range(1, max_errors + 1):
-        w = jnp.asarray(rng.integers(0, code.p, (trials, code.k)), jnp.int32)
-        cw = np.asarray(encode_words(w, code))
-        y = cw.copy()
-        for b in range(trials):
-            idx = rng.choice(code.n, m, replace=False)
-            y[b, idx] += rng.choice([-1, 1], m)
-        y_corr, _ = decode_integers(code, jnp.asarray(y), n_iters=n_iters,
-                                    damping=damping, llv_mode=llv_mode)
-        r[m] = float((np.asarray(y_corr) != cw).mean())
-    return r
-
-
-def binom_pmf(n: int, eps: float, m: int) -> float:
-    if eps <= 0:
-        return 1.0 if m == 0 else 0.0
-    logp = (math.lgamma(n + 1) - math.lgamma(m + 1) - math.lgamma(n - m + 1)
-            + m * math.log(eps) + (n - m) * math.log1p(-eps))
-    return math.exp(logp)
+                          seed: int = 0, llv_mode: str = "manhattan",
+                          info: bool = False):
+    """r[m] for m = 0..max_errors under the ±1 integer-error channel.
+    `info=True` measures over the k info symbols only (data BER)."""
+    prof = _profile(code, max_errors, trials, n_iters, damping, seed,
+                    llv_mode)
+    return prof.r_info if info else prof.r_word
 
 
 def post_ber(code, r: np.ndarray, eps: float) -> float:
-    """Semi-analytic post-correction symbol error rate at raw symbol BER eps."""
-    total = 0.0
-    for m in range(1, len(r)):
-        total += binom_pmf(code.n, eps, m) * r[m]
-    # tail beyond max_errors: assume decoder fails completely (r = m/n-ish);
-    # upper-bound with eps (errors stay)
-    tail = 1.0 - sum(binom_pmf(code.n, eps, m) for m in range(len(r)))
-    total += max(tail, 0.0) * eps * 2
-    return max(total, 0.0)
+    """Semi-analytic post-correction symbol error rate at raw BER eps."""
+    return mix_post_ber(code.n, np.asarray(r), eps)
 
 
 def ber_curve(code, raw_bers, **kw):
     r = conditional_residuals(code, **kw)
     return {eps: post_ber(code, r, eps) for eps in raw_bers}, r
+
+
+def ber_curves(code, raw_bers, *, max_errors: int = 12, trials: int = 128,
+               n_iters: int = 12, damping: float = 0.3, seed: int = 0,
+               llv_mode: str = "manhattan"):
+    """Both curves at once: {"word": {eps: post}, "info": {eps: post}} plus
+    the underlying ResidualProfile — one set of decode runs, two reports."""
+    prof = _profile(code, max_errors, trials, n_iters, damping, seed,
+                    llv_mode)
+    word = {eps: mix_post_ber(code.n, prof.r_word, eps) for eps in raw_bers}
+    info = {eps: mix_post_ber(code.n, prof.r_info, eps) for eps in raw_bers}
+    return {"word": word, "info": info}, prof

@@ -1,0 +1,58 @@
+"""Standardized benchmark-row persistence.
+
+`results/bench_rows.json` is a flat, append-only JSON list of row objects so
+the perf trajectory across PRs/runs is machine-readable. Every row carries
+at least {"bench": <name>, "schema_version": 1} plus the bench's metrics.
+Legacy dict-of-lists files (the pre-subsystem layout) are flattened on
+first append.
+"""
+from __future__ import annotations
+
+import json
+import os
+from datetime import datetime, timezone
+from typing import List, Optional, Sequence
+
+SCHEMA_VERSION = 1
+DEFAULT_PATH = "results/bench_rows.json"
+
+
+def standardize(rows: Sequence[dict], bench: str,
+                ts: Optional[str] = None) -> List[dict]:
+    """Rows from one run share one `ts`, so consumers can group/select by
+    run instead of guessing which of the accumulated rows is current."""
+    if ts is None:
+        ts = datetime.now(timezone.utc).isoformat(timespec="seconds")
+    out = []
+    for r in rows:
+        r = dict(r)
+        r.setdefault("bench", bench)
+        r.setdefault("schema_version", SCHEMA_VERSION)
+        r.setdefault("ts", ts)
+        out.append(r)
+    return out
+
+
+def load_rows(path: str = DEFAULT_PATH) -> List[dict]:
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        data = json.load(f)
+    if isinstance(data, dict):          # legacy {bench: [rows]} layout
+        flat: List[dict] = []
+        for name, rs in data.items():
+            flat.extend(standardize(rs, name, ts=""))   # measured pre-schema
+        return flat
+    return data
+
+
+def append_rows(path: str, bench: str, rows: Sequence[dict]) -> int:
+    """Append standardized rows under `bench`; returns the new total."""
+    existing = load_rows(path)
+    existing.extend(standardize(rows, bench))
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(existing, f, indent=1, default=str)
+    return len(existing)

@@ -11,12 +11,16 @@ Design (DESIGN.md §5):
   - **self-describing**: `manifest.json` records step, data-pipeline state,
     mesh shape, and a payload checksum;
   - **NB-LDPC-protected payloads** (the paper's *memory mode*): optionally the
-    serialized bytes of every array are GF(3)-symbolized, encoded with the
-    framework's own code, and verified/corrected on load — the paper's ECC
-    guarding the framework's own storage path (`protect=True`).
+    serialized bytes of every array are packed into GF(p) codewords through
+    `repro.memory.ProtectedMemoryArray` (base-p symbolization + systematic
+    encode) and verified/corrected on load — the paper's ECC guarding the
+    framework's own storage path (`protect=True`). Storage faults are
+    injected through the `repro.memory.channel` models via
+    `inject_storage_faults`, never by hand-editing the `.prot.npz` files.
 """
 from __future__ import annotations
 
+import glob
 import hashlib
 import json
 import os
@@ -25,11 +29,10 @@ import time
 from typing import Any, Dict, Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
-from repro.core import get_code, np_encode_words
-from repro.core.decode import decode_integers
-import jax.numpy as jnp
+from repro.memory import Channel, ProtectedMemoryArray, StoredTensor
 
 
 def _flatten(tree) -> Dict[str, Any]:
@@ -62,42 +65,59 @@ def _checksum(arrs: Dict[str, np.ndarray]) -> str:
     return h.hexdigest()[:16]
 
 
-# -- NB-LDPC memory-mode protection of payload bytes ------------------------
+# -- NB-LDPC memory-mode protection of payloads ------------------------------
 
 _PROT_CODE = "wl1024_r08"
+_PROT_VERSION = 2          # v2: base-p symbolization via repro.memory (v1
+#                            was the pre-subsystem crumb encoding)
 
 
-def _protect_bytes(raw: bytes) -> Dict[str, np.ndarray]:
-    """bytes -> GF(3) symbols (4 per byte, base-3 digits of crumbs) encoded
-    into codewords of the registry code. Returns dict of arrays to save."""
-    code = get_code(_PROT_CODE)
-    b = np.frombuffer(raw, np.uint8).astype(np.int64)
-    crumbs = np.stack([(b >> (2 * i)) & 0x3 for i in range(4)], -1).reshape(-1)
-    # 2-bit crumbs (0..3): symbolize as two GF(3) digits to stay in-field
-    hi, lo = crumbs >> 1, crumbs & 1
-    syms = np.stack([hi, lo], -1).reshape(-1)
-    pad = (-syms.size) % code.k
-    syms = np.pad(syms, (0, pad))
-    words = syms.reshape(-1, code.k)
-    enc = np_encode_words(words, code)
-    return {"enc": enc.astype(np.int8), "nbytes": np.asarray([len(raw)])}
+def _protected_memory() -> ProtectedMemoryArray:
+    return ProtectedMemoryArray(_PROT_CODE, controller="basic", n_iters=10,
+                                damping=0.3)
 
 
-def _unprotect_bytes(enc: np.ndarray, nbytes: int, correct: bool = True) -> bytes:
-    code = get_code(_PROT_CODE)
-    enc = enc.astype(np.int64)
-    if correct:
-        # memory mode: stored values ARE field symbols, so take the decoder's
-        # hard symbol decisions (not the arithmetic reinterpretation, which
-        # maps to the nearest *integer* of the decoded residue class)
-        _y, res = decode_integers(code, jnp.asarray(enc), n_iters=10,
-                                  damping=0.3)
-        enc = np.asarray(res.symbols)
-    syms = enc[:, :code.k].reshape(-1)[:nbytes * 8]   # 2 digits x 4 crumbs/byte
-    hi, lo = syms[0::2], syms[1::2]
-    crumbs = ((np.clip(hi, 0, 1) << 1) | np.clip(lo, 0, 1)).reshape(-1, 4)
-    b = sum(crumbs[:, i].astype(np.uint8) << (2 * i) for i in range(4))
-    return b.astype(np.uint8).tobytes()
+def _stored_to_npz(st: StoredTensor) -> Dict[str, np.ndarray]:
+    return {"enc": st.enc, "nbytes": np.asarray([st.nbytes]),
+            "dtype": str(st.dtype), "shape": np.asarray(st.shape, np.int64)}
+
+
+def _npz_to_stored(z) -> StoredTensor:
+    return StoredTensor(np.asarray(z["enc"], np.int8), str(z["dtype"]),
+                        tuple(int(s) for s in z["shape"]),
+                        int(z["nbytes"][0]))
+
+
+def inject_storage_faults(directory: str, channel: Channel, *,
+                          key: int = 0, step: Optional[int] = None,
+                          t: float = 0.0, n_reads: int = 0) -> int:
+    """Corrupt a protected checkpoint's stored codewords in place through a
+    `repro.memory.channel` model (the supported way to simulate storage rot
+    — callers never touch the `.prot.npz` layout). Returns cells changed."""
+    if channel.domain != "level":
+        raise ValueError(f"{type(channel).__name__} is an integer-domain "
+                         "channel; stored cells need a level-domain one")
+    from repro.core.codes import REGISTRY
+    p = REGISTRY[_PROT_CODE][2]      # field size without building the code
+    if channel.p != p:
+        raise ValueError(f"channel alphabet {channel.p} != GF({p})")
+    step = latest_step(directory) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {directory}")
+    d = os.path.join(directory, f"step_{step:08d}")
+    base = jax.random.PRNGKey(key)
+    changed = 0
+    for i, fn in enumerate(sorted(glob.glob(os.path.join(d, "*.prot.npz")))):
+        z = dict(np.load(fn, allow_pickle=False))
+        enc = np.asarray(z["enc"], np.int8)
+        new = np.asarray(channel.apply(jax.random.fold_in(base, i),
+                                       jnp.asarray(enc, jnp.int32),
+                                       t=t, n_reads=n_reads), np.int8)
+        changed += int((new != enc).sum())
+        z["enc"] = new
+        with open(fn, "wb") as f:
+            np.savez(f, **z)
+    return changed
 
 
 # -- public API --------------------------------------------------------------
@@ -112,13 +132,13 @@ def save_checkpoint(directory: str, step: int, tree, *, extra: Optional[dict]
     final = os.path.join(directory, f"step_{step:08d}")
     os.makedirs(tmp, exist_ok=True)
 
+    mem = _protected_memory() if protect else None
     for k, arr in flat.items():
         fn = os.path.join(tmp, k.replace("/", "__") + ".npy")
         if protect:
-            raw = arr.tobytes()
-            prot = _protect_bytes(raw)
-            np.savez(fn + ".prot.npz", dtype=str(arr.dtype),
-                     shape=np.asarray(arr.shape), **prot)
+            st = mem.write(k, arr)
+            np.savez(fn + ".prot.npz", **_stored_to_npz(st))
+            mem.discard(k)           # one leaf resident at a time
         else:
             np.save(fn, arr)
 
@@ -127,6 +147,8 @@ def save_checkpoint(directory: str, step: int, tree, *, extra: Optional[dict]
         "time": time.time(),
         "checksum": _checksum(flat),
         "protected": protect,
+        "prot_version": _PROT_VERSION if protect else None,
+        "prot_code": _PROT_CODE if protect else None,
         "extra": extra or {},
         "leaves": sorted(flat),
     }
@@ -165,19 +187,36 @@ def restore_checkpoint(directory: str, template, *, step: Optional[int] = None,
     with open(os.path.join(d, "manifest.json")) as f:
         manifest = json.load(f)
 
+    mem = None
+    if manifest["protected"]:
+        if manifest.get("prot_version") != _PROT_VERSION:
+            raise IOError(
+                f"checkpoint {d} uses protected-payload format "
+                f"{manifest.get('prot_version')}; this build reads "
+                f"version {_PROT_VERSION}")
+        mem = ProtectedMemoryArray(manifest.get("prot_code", _PROT_CODE),
+                                   controller="basic", n_iters=10,
+                                   damping=0.3)
+
     flat = {}
     for key in manifest["leaves"]:
         fn = os.path.join(d, key.replace("/", "__") + ".npy")
-        if manifest["protected"]:
+        if mem is not None:
             z = np.load(fn + ".prot.npz")
-            raw = _unprotect_bytes(z["enc"], int(z["nbytes"][0]), correct)
-            arr = np.frombuffer(raw, dtype=np.dtype(str(z["dtype"])))
-            flat[key] = arr.reshape(tuple(int(s) for s in z["shape"]))
+            mem.import_stored(key, _npz_to_stored(z))
+            flat[key] = mem.read(key, correct=correct)
+            mem.discard(key)         # one leaf resident at a time
         else:
             flat[key] = np.load(fn)
 
-    if manifest["protected"] is False and _checksum(flat) != manifest["checksum"]:
-        raise IOError(f"checkpoint {d} failed checksum verification")
+    if mem is not None:
+        manifest["correction_stats"] = mem.stats.as_dict()
+    if _checksum(flat) != manifest["checksum"]:
+        if not manifest["protected"]:
+            raise IOError(f"checkpoint {d} failed checksum verification")
+        if correct:
+            raise IOError(f"checkpoint {d} failed post-correction checksum "
+                          "(storage errors exceeded the code's strength)")
 
     tree = _unflatten_into(template, flat)
     if shardings is not None:

@@ -46,5 +46,14 @@ def encode_weight_matrix(W_int, code: LDPCCode):
 
 
 def np_encode_words(w: np.ndarray, code: LDPCCode) -> np.ndarray:
-    checks = (w.astype(np.int64) @ code.P) % code.p
+    """Host-side systematic encode (checkpoint / ProtectedMemoryArray write
+    path). Symbols and P entries live in [0, p), so when every accumulated
+    product is bounded by k*(p-1)^2 << 2^24 the matmul runs in float32 to
+    hit BLAS — NumPy integer matmul is a slow C loop."""
+    wmax = int(np.abs(w).max()) if w.size else 0
+    if code.k * wmax * (code.p - 1) < 2 ** 24:
+        prods = w.astype(np.float32) @ code.P.astype(np.float32)
+        checks = prods.astype(np.int64) % code.p
+    else:
+        checks = (w.astype(np.int64) @ code.P) % code.p
     return np.concatenate([w.astype(np.int64), checks], axis=-1)

@@ -1,0 +1,38 @@
+"""Protected-memory subsystem: the paper's *memory mode* as a real layer.
+
+- `channel`    — composable MLC memristor channel models (asymmetric level
+                 transitions, retention drift, read disturb, stuck-at cells)
+                 driven by explicit PRNG keys;
+- `array`      — `ProtectedMemoryArray`: tensors packed into GF(p)
+                 codewords on write, decoded on read;
+- `controller` — pluggable controller policies (basic / writeback / scrub)
+                 with per-policy stats;
+- `campaign`   — the semi-analytic BER campaign engine (any scheme x any
+                 channel), producing the paper-style improvement tables.
+"""
+from .array import (ProtectedMemoryArray, StoredTensor, symbolize_bytes,
+                    desymbolize_bytes, digits_per_byte)
+from .channel import (Channel, LevelTransition, RetentionDrift, ReadDisturb,
+                      StuckAt, Compose, PlusMinusOne, uniform_flip,
+                      asymmetric_adjacent, validate_transition)
+from .controller import (ControllerStats, MemoryController,
+                         WritebackController, ScrubController,
+                         make_controller)
+from .campaign import (ResidualProfile, NBLDPCScheme, HammingSECDEDScheme,
+                       ModuloParityScheme, UnprotectedScheme, binom_pmf,
+                       conditional_residual_profile, post_ber_from_profile,
+                       run_campaign, paper_schemes, select_acceptance_row)
+
+__all__ = [
+    "ProtectedMemoryArray", "StoredTensor", "symbolize_bytes",
+    "desymbolize_bytes", "digits_per_byte",
+    "Channel", "LevelTransition", "RetentionDrift", "ReadDisturb", "StuckAt",
+    "Compose", "PlusMinusOne", "uniform_flip", "asymmetric_adjacent",
+    "validate_transition",
+    "ControllerStats", "MemoryController", "WritebackController",
+    "ScrubController", "make_controller",
+    "ResidualProfile", "NBLDPCScheme", "HammingSECDEDScheme",
+    "ModuloParityScheme", "UnprotectedScheme", "binom_pmf",
+    "conditional_residual_profile", "post_ber_from_profile", "run_campaign",
+    "paper_schemes", "select_acceptance_row",
+]

@@ -1,0 +1,175 @@
+"""`ProtectedMemoryArray`: NB-LDPC-protected tensor storage (memory mode).
+
+Arbitrary tensors are packed into GF(p) codewords on write — bytes are
+symbolized as base-p digits (6 trits/byte for GF(3), vs the 8 binary-valued
+trits/byte of the original checkpoint hack: 25% fewer cells) and encoded
+with the framework's own systematic code — and decoded on read through the
+vectorized `repro.core.decode` engine, under a pluggable controller policy
+(`repro.memory.controller`). Device faults are injected through the
+`repro.memory.channel` models, never by hand-editing stored words.
+
+    mem = ProtectedMemoryArray(code="wl1024_r08", controller="writeback")
+    mem.write("kv", kv_cache)
+    mem.inject(asymmetric_adjacent(3, 1e-3, 5e-4), key=0)
+    kv = mem.read("kv")                   # corrected transparently
+    mem.controller.stats.corrected       # accounting per policy
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import get_code, np_encode_words
+from repro.core.construction import LDPCCode
+
+from .channel import Channel
+from .controller import MemoryController, make_controller
+
+__all__ = ["ProtectedMemoryArray", "StoredTensor", "symbolize_bytes",
+           "desymbolize_bytes", "digits_per_byte"]
+
+
+def digits_per_byte(p: int) -> int:
+    """Base-p digits needed to hold one byte: ceil(log_p 256)."""
+    return math.ceil(8.0 / math.log2(p))
+
+
+def symbolize_bytes(raw: Union[bytes, np.ndarray], p: int) -> np.ndarray:
+    """bytes -> flat array of base-p digits (little-endian per byte)."""
+    b = np.frombuffer(raw, np.uint8).astype(np.int64) \
+        if not isinstance(raw, np.ndarray) else raw.astype(np.int64)
+    D = digits_per_byte(p)
+    return np.stack([(b // p ** i) % p for i in range(D)], -1).reshape(-1)
+
+
+def desymbolize_bytes(syms: np.ndarray, nbytes: int, p: int) -> bytes:
+    """Inverse of `symbolize_bytes`. Digits are clipped into the field and
+    the value into a byte, so corrupted-but-uncorrected symbols degrade to
+    wrong bytes instead of crashing."""
+    D = digits_per_byte(p)
+    d = np.clip(syms[:nbytes * D].reshape(-1, D).astype(np.int64), 0, p - 1)
+    vals = sum(d[:, i] * p ** i for i in range(D)) % 256
+    return vals.astype(np.uint8).tobytes()
+
+
+@dataclasses.dataclass
+class StoredTensor:
+    """One tensor's protected representation: (n_words, n) cell levels."""
+
+    enc: np.ndarray                # (n_words, n) levels in [0, p), int8
+    dtype: str
+    shape: tuple
+    nbytes: int
+
+
+class ProtectedMemoryArray:
+    """A named store of tensors held as NB-LDPC codewords of one code."""
+
+    def __init__(self, code: Union[str, LDPCCode] = "wl1024_r08", *,
+                 controller: Union[str, MemoryController, None] = "basic",
+                 channel: Optional[Channel] = None, key: int = 0, **ctrl_kw):
+        self.code = get_code(code) if isinstance(code, str) else code
+        self.controller = make_controller(controller, **ctrl_kw)
+        self.channel = channel
+        self._store: Dict[str, StoredTensor] = {}
+        self._key = jax.random.PRNGKey(key)
+        self._injections = 0
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def names(self):
+        return sorted(self._store)
+
+    @property
+    def stats(self):
+        return self.controller.stats
+
+    def stored(self, name: str) -> StoredTensor:
+        return self._store[name]
+
+    def import_stored(self, name: str, st: StoredTensor) -> None:
+        """Adopt an externally persisted protected tensor (checkpoint
+        restore path) without re-encoding."""
+        self._store[name] = StoredTensor(
+            np.asarray(st.enc, np.int8), str(st.dtype), tuple(st.shape),
+            int(st.nbytes))
+
+    def discard(self, name: str) -> None:
+        """Drop a tensor's stored codewords (streaming save/restore keeps
+        one leaf resident at a time instead of the whole checkpoint)."""
+        self._store.pop(name, None)
+
+    def n_words(self) -> int:
+        return sum(st.enc.shape[0] for st in self._store.values())
+
+    # -- write / read -------------------------------------------------------
+
+    def write(self, name: str, array) -> StoredTensor:
+        arr = np.asarray(array)
+        raw = arr.tobytes()
+        code = self.code
+        syms = symbolize_bytes(raw, code.p)
+        pad = (-syms.size) % code.k
+        words = np.pad(syms, (0, pad)).reshape(-1, code.k)
+        enc = np_encode_words(words, code).astype(np.int8)
+        st = StoredTensor(enc, str(arr.dtype), arr.shape, len(raw))
+        self._store[name] = st
+        self.controller.note_write(enc.shape[0])
+        self.controller.tick(code, self._store)
+        return st
+
+    def read(self, name: str, *, correct: bool = True) -> np.ndarray:
+        st = self._store[name]
+        if correct:
+            levels = self.controller.read(self.code, self._store, name)
+        else:
+            levels = st.enc.astype(np.int64) % self.code.p
+        syms = levels[:, :self.code.k].reshape(-1)
+        raw = desymbolize_bytes(syms, st.nbytes, self.code.p)
+        arr = np.frombuffer(raw, dtype=np.dtype(st.dtype))
+        out = arr.reshape(st.shape)
+        self.controller.tick(self.code, self._store)
+        return out
+
+    # -- fault injection / maintenance --------------------------------------
+
+    def inject(self, channel: Optional[Channel] = None,
+               key: Union[int, jax.Array, None] = None, *, t: float = 0.0,
+               n_reads: int = 0) -> int:
+        """Corrupt the stored words in place through a channel model. `key`
+        is a PRNG key or a plain int seed. Returns the number of cells
+        actually changed. Each call folds a fresh sub-key, so repeated
+        injections accumulate (aging)."""
+        ch = channel if channel is not None else self.channel
+        if ch is None:
+            raise ValueError("no channel: pass one or construct the array "
+                             "with channel=...")
+        if ch.domain != "level":
+            raise ValueError(f"{type(ch).__name__} is an integer-domain "
+                             "channel; stored cells need a level-domain one")
+        if ch.p != self.code.p:
+            raise ValueError(f"channel alphabet {ch.p} != GF({self.code.p})")
+        if key is None:
+            key = jax.random.fold_in(self._key, self._injections)
+        elif isinstance(key, int):
+            key = jax.random.PRNGKey(key)
+        self._injections += 1
+        changed = 0
+        for i, name in enumerate(self.names):
+            st = self._store[name]
+            k = jax.random.fold_in(key, i)
+            new = np.asarray(ch.apply(k, jnp.asarray(st.enc, jnp.int32),
+                                      t=t, n_reads=n_reads), np.int8)
+            changed += int((new != st.enc).sum())
+            st.enc = new
+        return changed
+
+    def scrub(self) -> dict:
+        """Explicit full sweep (any policy): scan + repair storage."""
+        return self.controller.scrub(self.code, self._store)

@@ -1,0 +1,255 @@
+"""Pluggable memory-controller policies for NB-LDPC-protected storage.
+
+Modeled on the classic ECC-memory-controller taxonomy (basic / write-back /
+refresh):
+
+- **basic** — correct read responses, never touch the stored words; latent
+  errors accumulate in storage until they exceed the code's strength.
+- **writeback** — additionally rewrite every corrected word back into
+  storage on read, so each read also repairs (read-triggered refresh).
+- **scrub** — writeback plus a periodic background sweep over the whole
+  array: syndromes are scanned for every stored word, flagged words are
+  batch-decoded (sharded across local devices via
+  `repro.distributed.sharding.decode_sharded` when more than one is
+  visible) and repaired in place. `interval` counts read/write operations
+  between automatic sweeps; `scrub()` can also be called explicitly.
+
+All policies share the same read path: a cheap host-side syndrome scan over
+the stored words, then the iterative decoder runs ONLY on flagged words,
+gathered into fixed-size chunks so one jitted executable serves every read
+(the same trick as `repro.core.protected.decode_stream`). Per-policy
+counters (detected / corrected / uncorrectable / writebacks / scrub
+bandwidth) live in `ControllerStats`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.construction import LDPCCode
+from repro.core.decode import decode_integers
+
+__all__ = ["ControllerStats", "MemoryController", "WritebackController",
+           "ScrubController", "make_controller"]
+
+
+@dataclasses.dataclass
+class ControllerStats:
+    reads: int = 0
+    writes: int = 0
+    words_read: int = 0
+    words_written: int = 0
+    detected: int = 0              # words with nonzero syndrome seen on read
+    corrected: int = 0             # flagged words the decoder fixed
+    uncorrectable: int = 0         # flagged words with residual syndrome
+    writebacks: int = 0            # corrected words rewritten into storage
+    scrub_rounds: int = 0
+    scrub_words: int = 0           # words syndrome-scanned by scrubbing
+    scrub_cells: int = 0           # cells scanned (words * n)
+    scrub_corrected: int = 0
+    scrub_uncorrectable: int = 0
+    scrub_seconds: float = 0.0
+
+    @property
+    def scrub_bandwidth_cells_per_s(self) -> float:
+        return self.scrub_cells / self.scrub_seconds if self.scrub_seconds \
+            else 0.0
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["scrub_bandwidth_cells_per_s"] = self.scrub_bandwidth_cells_per_s
+        return d
+
+
+class MemoryController:
+    """`basic` policy: correct-on-read, storage untouched."""
+
+    policy = "basic"
+
+    def __init__(self, *, n_iters: int = 10, damping: float = 0.3,
+                 llv_scale: float = 4.0, llv_mode: str = "manhattan",
+                 chunk_size: int = 256, use_sharded: Optional[bool] = None):
+        self.n_iters = n_iters
+        self.damping = damping
+        self.llv_scale = llv_scale
+        self.llv_mode = llv_mode
+        self.chunk_size = chunk_size
+        self.use_sharded = (len(jax.devices()) > 1 if use_sharded is None
+                            else use_sharded)
+        self.stats = ControllerStats()
+        self._jit_cache: Dict[int, Tuple[LDPCCode, object]] = {}
+
+    # -- decode plumbing ----------------------------------------------------
+
+    def _decoder(self, code: LDPCCode):
+        """One jitted fixed-shape (chunk_size, n) decoder per code."""
+        hit = self._jit_cache.get(id(code))
+        if hit is not None and hit[0] is code:
+            return hit[1]
+
+        if self.use_sharded:
+            from repro.distributed.sharding import data_mesh, decode_sharded
+            mesh = data_mesh()
+
+            def run(y):
+                return decode_sharded(code, y, mesh=mesh,
+                                      n_iters=self.n_iters,
+                                      llv_scale=self.llv_scale,
+                                      llv_mode=self.llv_mode,
+                                      damping=self.damping, early_exit=True)
+        else:
+            def run(y):
+                return decode_integers(code, y, n_iters=self.n_iters,
+                                       llv_scale=self.llv_scale,
+                                       llv_mode=self.llv_mode,
+                                       damping=self.damping, early_exit=True)
+
+        fn = jax.jit(run)
+        self._jit_cache[id(code)] = (code, fn)
+        return fn
+
+    def _decode_words(self, code: LDPCCode, words: np.ndarray):
+        """Decode (B, n) stored level-words -> (symbols (B, n), fail (B,)).
+        Chunks are padded to `chunk_size` so one executable serves any B."""
+        fn = self._decoder(code)
+        B = words.shape[0]
+        cs = self.chunk_size
+        syms = np.empty((B, code.n), np.int64)
+        fail = np.empty(B, bool)
+        for lo in range(0, B, cs):
+            chunk = words[lo:lo + cs].astype(np.int32)
+            b = chunk.shape[0]
+            if b < cs:
+                chunk = np.concatenate(
+                    [chunk, np.zeros((cs - b, code.n), np.int32)])
+            _y, res = fn(jnp.asarray(chunk))
+            syms[lo:lo + b] = np.asarray(res.symbols[:b])
+            fail[lo:lo + b] = np.asarray(res.detect_fail[:b])
+        return syms, fail
+
+    @staticmethod
+    def _scan_syndromes(code: LDPCCode, enc: np.ndarray) -> np.ndarray:
+        """Host-side syndrome scan -> flagged mask (B,). This is the cheap
+        always-on part of the read path; decode runs only on flags.
+
+        Runs in float32 so the matmul hits BLAS (NumPy integer matmul is a
+        slow C loop — this is the scrub-bandwidth hot path). Exact because
+        every accumulated product is bounded by n*(p-1)^2 << 2^24."""
+        assert code.n * (code.p - 1) ** 2 < 2 ** 24
+        s = enc.astype(np.float32) @ code.H.T.astype(np.float32)
+        return np.any(s.astype(np.int64) % code.p != 0, axis=1)
+
+    def _correct(self, code: LDPCCode, enc: np.ndarray):
+        """-> (corrected levels (B, n), flagged, fail) without stats."""
+        flagged = self._scan_syndromes(code, enc)
+        out = enc.astype(np.int64) % code.p
+        fail = np.zeros(enc.shape[0], bool)
+        if flagged.any():
+            syms, f = self._decode_words(code, enc[flagged])
+            out[flagged] = syms
+            fail[flagged] = f
+        return out, flagged, fail
+
+    # -- policy surface -----------------------------------------------------
+
+    def read(self, code: LDPCCode, store: dict, name: str) -> np.ndarray:
+        st = store[name]
+        out, flagged, fail = self._correct(code, st.enc)
+        self.stats.reads += 1
+        self.stats.words_read += st.enc.shape[0]
+        self.stats.detected += int(flagged.sum())
+        self.stats.corrected += int((flagged & ~fail).sum())
+        self.stats.uncorrectable += int(fail.sum())
+        self._writeback(st, out, flagged, fail)
+        return out
+
+    def _writeback(self, st, corrected: np.ndarray, flagged: np.ndarray,
+                   fail: np.ndarray) -> None:
+        pass                        # basic: never touch storage
+
+    def note_write(self, n_words: int) -> None:
+        self.stats.writes += 1
+        self.stats.words_written += n_words
+
+    def tick(self, code: LDPCCode, store: dict) -> None:
+        pass                        # only the scrub policy acts on ticks
+
+    def scrub(self, code: LDPCCode, store: dict) -> dict:
+        """Full-array sweep: scan every stored word, repair flagged words in
+        place (every policy may be scrubbed explicitly; only
+        `ScrubController` does it automatically). Returns a report with the
+        sweep's counts and scan bandwidth."""
+        t0 = time.perf_counter()
+        words = flagged_n = corrected_n = fail_n = 0
+        for st in store.values():
+            out, flagged, fail = self._correct(code, st.enc)
+            ok = flagged & ~fail
+            if ok.any():
+                st.enc[ok] = out[ok].astype(st.enc.dtype)
+            words += st.enc.shape[0]
+            flagged_n += int(flagged.sum())
+            corrected_n += int(ok.sum())
+            fail_n += int(fail.sum())
+        dt = time.perf_counter() - t0
+        self.stats.scrub_rounds += 1
+        self.stats.scrub_words += words
+        self.stats.scrub_cells += words * code.n
+        self.stats.scrub_corrected += corrected_n
+        self.stats.scrub_uncorrectable += fail_n
+        self.stats.scrub_seconds += dt
+        return {"policy": self.policy, "words_scanned": words,
+                "cells_scanned": words * code.n, "flagged": flagged_n,
+                "corrected": corrected_n, "uncorrectable": fail_n,
+                "seconds": dt,
+                "bandwidth_cells_per_s": words * code.n / dt if dt else 0.0}
+
+
+class WritebackController(MemoryController):
+    """`writeback` policy: reads repair storage as a side effect."""
+
+    policy = "writeback"
+
+    def _writeback(self, st, corrected, flagged, fail):
+        ok = flagged & ~fail
+        if ok.any():
+            st.enc[ok] = corrected[ok].astype(st.enc.dtype)
+            self.stats.writebacks += int(ok.sum())
+
+
+class ScrubController(WritebackController):
+    """`scrub` policy: writeback + a background sweep every `interval`
+    read/write operations."""
+
+    policy = "scrub"
+
+    def __init__(self, *, interval: int = 16, **kw):
+        super().__init__(**kw)
+        self.interval = interval
+        self._ops = 0
+
+    def tick(self, code: LDPCCode, store: dict) -> None:
+        self._ops += 1
+        if self._ops % self.interval == 0:
+            self.scrub(code, store)
+
+
+_POLICIES = {"basic": MemoryController, "writeback": WritebackController,
+             "scrub": ScrubController}
+
+
+def make_controller(spec, **kw) -> MemoryController:
+    """spec: a policy name ("basic" | "writeback" | "scrub"), a controller
+    instance (passed through), or None (basic)."""
+    if isinstance(spec, MemoryController):
+        return spec
+    if spec is None:
+        spec = "basic"
+    if spec not in _POLICIES:
+        raise KeyError(f"unknown controller policy {spec!r}; "
+                       f"available: {sorted(_POLICIES)}")
+    return _POLICIES[spec](**kw)

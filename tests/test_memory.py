@@ -1,0 +1,285 @@
+"""Protected-memory subsystem: channel models, ProtectedMemoryArray,
+controller policies, checkpoint integration, and the BER campaign engine."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import get_code
+from repro.memory import (Compose, LevelTransition, PlusMinusOne,
+                          ProtectedMemoryArray, ReadDisturb, RetentionDrift,
+                          ScrubController, StuckAt, asymmetric_adjacent,
+                          desymbolize_bytes, paper_schemes, run_campaign,
+                          select_acceptance_row, symbolize_bytes,
+                          uniform_flip)
+
+
+# ---------------------------------------------------------------------------
+# channels
+# ---------------------------------------------------------------------------
+
+LEVELS = jnp.asarray(np.random.default_rng(0).integers(0, 3, (32, 80)),
+                     jnp.int32)
+
+
+@pytest.mark.parametrize("ch", [
+    uniform_flip(3, 0.05),
+    asymmetric_adjacent(3, 0.04, 0.01),
+    RetentionDrift(3, rate=1e-3, rest_level=0),
+    ReadDisturb(3, per_read=1e-3),
+    StuckAt(3, fraction=0.02, seed=11),
+    Compose(asymmetric_adjacent(3, 0.02, 0.01), StuckAt(3, 0.01, seed=2)),
+])
+def test_channel_determinism_same_key_same_faults(ch):
+    kw = dict(t=100.0, n_reads=50)
+    a = np.asarray(ch.apply(jax.random.PRNGKey(42), LEVELS, **kw))
+    b = np.asarray(ch.apply(jax.random.PRNGKey(42), LEVELS, **kw))
+    assert (a == b).all()
+    assert ((a >= 0) & (a < 3)).all()
+
+
+def test_transition_matrix_row_stochasticity_validated():
+    with pytest.raises(ValueError, match="sum to 1"):
+        LevelTransition(np.array([[0.5, 0.4], [0.0, 1.0]]))
+    with pytest.raises(ValueError, match="negative"):
+        LevelTransition(np.array([[1.2, -0.2], [0.0, 1.0]]))
+    with pytest.raises(ValueError, match="square"):
+        LevelTransition(np.ones((2, 3)) / 3)
+    # a valid matrix passes and reports its marginal error rate
+    ch = uniform_flip(5, 0.1)
+    assert ch.error_rate() == pytest.approx(0.1)
+
+
+def test_retention_drift_grows_with_time_read_disturb_with_reads():
+    drift = RetentionDrift(3, rate=1e-3, rest_level=0)
+    assert drift.error_rate(t=0.0) == 0.0
+    assert 0 < drift.error_rate(t=100.0) < drift.error_rate(t=2000.0)
+    rd = ReadDisturb(3, per_read=1e-3)
+    assert rd.error_rate(n_reads=0) == 0.0
+    assert 0 < rd.error_rate(n_reads=10) < rd.error_rate(n_reads=1000)
+
+
+def test_stuck_cells_are_persistent_across_keys():
+    ch = StuckAt(3, fraction=0.05, stuck_level=1, seed=3)
+    a = np.asarray(ch.apply(jax.random.PRNGKey(0), LEVELS))
+    b = np.asarray(ch.apply(jax.random.PRNGKey(999), LEVELS))
+    assert (a == b).all()                      # mask depends on seed, not key
+    assert (a[a != np.asarray(LEVELS)] == 1).all()
+
+
+def test_corrupt_exact_changes_exactly_m_cells():
+    ch = asymmetric_adjacent(3, 0.04, 0.01)
+    y = ch.corrupt_exact(jax.random.PRNGKey(5), LEVELS, 7)
+    diffs = (np.asarray(y) != np.asarray(LEVELS)).sum(axis=1)
+    assert (diffs == 7).all()
+
+
+def test_plusminusone_is_integer_domain():
+    ch = PlusMinusOne(0.5)
+    y = jnp.zeros((8, 50), jnp.int32)
+    out = np.asarray(ch.apply(jax.random.PRNGKey(0), y))
+    assert set(np.unique(out)) <= {-1, 0, 1}
+    exact = np.asarray(ch.corrupt_exact(jax.random.PRNGKey(1), y, 4))
+    assert (np.abs(exact).sum(axis=1) == 4).all()
+
+
+def test_compose_validates_alphabets():
+    with pytest.raises(ValueError, match="mixed"):
+        Compose(uniform_flip(3, 0.1), uniform_flip(5, 0.1))
+
+
+# ---------------------------------------------------------------------------
+# symbolization
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("p", [3, 5, 7])
+def test_symbolize_roundtrip(p, rng):
+    raw = rng.integers(0, 256, 513, np.uint8).tobytes()
+    syms = symbolize_bytes(raw, p)
+    assert syms.min() >= 0 and syms.max() < p
+    assert desymbolize_bytes(syms, 513, p) == raw
+
+
+# ---------------------------------------------------------------------------
+# array + controller policies
+# ---------------------------------------------------------------------------
+
+def _array(policy, **kw):
+    return ProtectedMemoryArray("wl80_r08", controller=policy,
+                                chunk_size=64, **kw)
+
+
+@pytest.mark.parametrize("policy", ["basic", "writeback", "scrub"])
+def test_write_corrupt_read_roundtrip_exact(policy, rng):
+    mem = _array(policy)
+    if policy == "scrub":
+        mem.controller.interval = 10 ** 9            # no auto-sweeps here
+    t = rng.normal(size=(24, 12)).astype(np.float32)
+    mem.write("t", t)
+    mem.inject(asymmetric_adjacent(3, 3e-3, 1e-3), key=jax.random.PRNGKey(0))
+    out = mem.read("t")
+    assert np.array_equal(out, t)
+    assert out.dtype == t.dtype
+    detected_first = mem.stats.detected
+    assert detected_first > 0
+    assert mem.stats.corrected == detected_first
+    assert mem.stats.uncorrectable == 0
+
+    out2 = mem.read("t")                             # storage not re-corrupted
+    assert np.array_equal(out2, t)
+    redetected = mem.stats.detected - detected_first
+    if policy == "basic":
+        assert redetected == detected_first          # latent errors remain
+        assert mem.stats.writebacks == 0
+    else:
+        assert redetected == 0                       # reads repaired storage
+        assert mem.stats.writebacks == detected_first
+
+
+def test_scrub_counters_and_repair(rng):
+    mem = _array("writeback")
+    a = rng.normal(size=(16, 8)).astype(np.float32)
+    b = rng.integers(0, 1000, 64).astype(np.int32)
+    mem.write("a", a)
+    mem.write("b", b)
+    total_words = mem.n_words()
+    mem.inject(uniform_flip(3, 2e-3), key=jax.random.PRNGKey(1))
+
+    report = mem.scrub()
+    assert report["words_scanned"] == total_words
+    assert report["corrected"] == report["flagged"] > 0
+    assert report["uncorrectable"] == 0
+    st = mem.stats
+    assert st.scrub_rounds == 1
+    assert st.scrub_words == total_words
+    assert st.scrub_cells == total_words * mem.code.n
+    assert st.scrub_corrected == report["corrected"]
+    assert st.scrub_bandwidth_cells_per_s > 0
+
+    # the sweep repaired storage: a clean re-scan flags nothing
+    report2 = mem.scrub()
+    assert report2["flagged"] == 0
+    assert np.array_equal(mem.read("a"), a)
+    assert np.array_equal(mem.read("b"), b)
+
+
+def test_scrub_policy_autosweeps_on_interval(rng):
+    mem = _array("scrub", use_sharded=False)
+    mem.controller.interval = 2
+    mem.write("x", rng.normal(size=(8, 4)).astype(np.float32))   # op 1
+    mem.inject(uniform_flip(3, 5e-3), key=jax.random.PRNGKey(2))
+    assert mem.stats.scrub_rounds == 0
+    mem.read("x")                                                # op 2 -> sweep
+    assert mem.stats.scrub_rounds == 1
+    assert isinstance(mem.controller, ScrubController)
+
+
+def test_uncorrectable_words_are_counted(rng):
+    mem = _array("basic")
+    mem.write("x", rng.normal(size=(32, 16)).astype(np.float32))
+    # far beyond the code's strength: most words must fail to decode
+    mem.inject(uniform_flip(3, 0.4), key=jax.random.PRNGKey(3))
+    mem.read("x")
+    assert mem.stats.uncorrectable > 0
+
+
+def test_integer_channel_rejected_for_storage(rng):
+    mem = _array("basic")
+    mem.write("x", rng.normal(size=(4, 4)).astype(np.float32))
+    with pytest.raises(ValueError, match="integer-domain"):
+        mem.inject(PlusMinusOne(0.1))
+    with pytest.raises(ValueError, match="alphabet"):
+        mem.inject(uniform_flip(5, 0.1))
+
+
+def test_import_export_stored_roundtrip(rng):
+    src = _array("basic")
+    t = rng.normal(size=(6, 6)).astype(np.float64)
+    st = src.write("t", t)
+    dst = _array("basic")
+    dst.import_stored("t", st)
+    assert np.array_equal(dst.read("t"), t)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint integration
+# ---------------------------------------------------------------------------
+
+def test_protected_checkpoint_survives_channel_faults(tmp_path, rng):
+    from repro import checkpoint as ckpt
+    tree = {"w": rng.normal(size=(32, 32)).astype(np.float32),
+            "b": rng.normal(size=(32,)).astype(np.float32)}
+    ckpt.save_checkpoint(str(tmp_path), 7, tree, protect=True)
+    noise = Compose(asymmetric_adjacent(3, 2e-3, 1e-3),
+                    StuckAt(3, 1e-4, seed=5))
+    assert ckpt.inject_storage_faults(str(tmp_path), noise, key=0) > 0
+    out, man = ckpt.restore_checkpoint(str(tmp_path), tree)
+    assert all(np.array_equal(out[k], tree[k]) for k in tree)
+    cs = man["correction_stats"]
+    assert cs["corrected"] == cs["detected"] > 0
+    assert cs["uncorrectable"] == 0
+
+
+def test_protected_checkpoint_version_guard(tmp_path, rng):
+    import json
+    import os
+    from repro import checkpoint as ckpt
+    tree = {"w": rng.normal(size=(4, 4)).astype(np.float32)}
+    d = ckpt.save_checkpoint(str(tmp_path), 1, tree, protect=True)
+    mf = os.path.join(d, "manifest.json")
+    with open(mf) as f:
+        man = json.load(f)
+    man["prot_version"] = 1
+    with open(mf, "w") as f:
+        json.dump(man, f)
+    with pytest.raises(IOError, match="format"):
+        ckpt.restore_checkpoint(str(tmp_path), tree)
+
+
+# ---------------------------------------------------------------------------
+# BER campaign engine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_campaign_reproduces_paper_style_comparison():
+    """Scaled-down acceptance check (the full wl1024 table is produced by
+    benchmarks/bench_memory_mode.py): at a raw BER where Hamming SECDED has
+    saturated, NB-LDPC still improves >= 10x over unprotected."""
+    code = get_code("wl256_r08")
+    out = run_campaign(paper_schemes(code), [2e-2, 1e-2, 1e-3, 1e-4],
+                       trials=24, hamming_trials=512, seed=0)
+    rows = out["rows"]
+    by = {(r["scheme"], r["raw_ber"]): r for r in rows}
+    # Hamming helps at low raw BER but saturates by 1e-2
+    assert by[("hamming_secded", 1e-4)]["improvement"] > 50
+    assert by[("hamming_secded", 1e-2)]["improvement"] < 3
+    # the modulo checksum is detect-only in memory mode
+    assert by[("modulo_parity", 1e-3)]["improvement"] == pytest.approx(1.0)
+    acc = select_acceptance_row(rows)
+    assert acc is not None
+    assert acc["nbldpc_improvement"] >= 10.0
+
+
+@pytest.mark.slow
+def test_campaign_runs_level_domain_channels():
+    """Any-channel support: the same engine runs an MLC level-transition
+    channel instead of the ±1 integer channel."""
+    from repro.memory import NBLDPCScheme
+    code = get_code("wl80_r08")
+    sch = NBLDPCScheme(code, asymmetric_adjacent(3, 0.7, 0.3), n_iters=8)
+    r_word, r_info = sch.residuals_at(1, trials=16, seed=0)
+    assert r_word == 0.0                        # single error always fixed
+    r_word8, _ = sch.residuals_at(16, trials=16, seed=0)
+    assert r_word8 > 0.0                        # way past the strength
+
+
+@pytest.mark.slow
+def test_ber_common_shim_and_info_residuals():
+    from benchmarks.ber_common import ber_curve, ber_curves
+    code = get_code("wl80_r08")
+    curve, r = ber_curve(code, [1e-3, 1e-4], trials=16, max_errors=6)
+    assert set(curve) == {1e-3, 1e-4}
+    assert len(r) == 7
+    curves, prof = ber_curves(code, [1e-3], trials=16, max_errors=6)
+    assert curves["info"][1e-3] <= curves["word"][1e-3] * 1.5
+    assert prof.n_info == code.k

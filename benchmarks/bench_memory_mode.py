@@ -74,6 +74,7 @@ def _throughput_rows(code_name: str, mbytes: float, eps: float,
             })
         rows.append({
             "section": "throughput", "policy": policy, "op": "scrub",
+            "backend": rep["backend"], "pages": rep["pages"],
             "code": code_name, "words_scanned": rep["words_scanned"],
             "flagged": rep["flagged"], "corrected": rep["corrected"],
             "uncorrectable": rep["uncorrectable"],

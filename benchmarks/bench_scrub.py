@@ -1,0 +1,140 @@
+"""Scrub-engine benchmark: syndrome-scan bandwidth (cells/s), host BLAS vs
+the fused Pallas device kernel, whole-array vs paged sweeps.
+
+CLI:  PYTHONPATH=src python -m benchmarks.bench_scrub
+        [--quick] [--json PATH] [--rows PATH]
+
+Measures, per backend (host / device) and paging mode:
+  - clean-array scrub bandwidth — the always-on cost, scan-only since
+    nothing is flagged (the number that must be memory-bound for the
+    paper's dataflow-friendly checking story);
+  - corrupted-array scrub (scan + decode of flagged words + repair), with
+    the parity check that host and device sweeps flag and repair
+    identically.
+
+`--quick` is the CI smoke mode. `--rows` (default results/bench_rows.json,
+'' to disable) appends standardized rows for the perf trajectory.
+
+On CPU hosts the "device" backend runs the kernel under the Pallas
+interpreter — a correctness/parity point, not a speed point; the bandwidth
+headline there is the host row. On TPU the device rows are the headline.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.core import get_code
+from repro.memory import ProtectedMemoryArray, asymmetric_adjacent
+
+from .rows import DEFAULT_PATH, append_rows
+
+
+def _fill(mem: ProtectedMemoryArray, mbytes: float) -> int:
+    rng = np.random.default_rng(0)
+    payload = rng.integers(0, 256, int(mbytes * 2 ** 20), np.uint8)
+    mem.write("blob", payload)
+    return mem.stored("blob").enc.shape[0]
+
+
+def _bench_backend(code_name: str, backend: str, mbytes: float, eps: float,
+                   page_words, chunk_size: int, repeats: int):
+    """Rows for one (backend, paging) point + the repaired storage bytes
+    for cross-backend parity checking."""
+    code = get_code(code_name)
+    mem = ProtectedMemoryArray(code, controller="writeback",
+                               chunk_size=chunk_size, scan_backend=backend)
+    n_words = _fill(mem, mbytes)
+    cells = n_words * code.n
+
+    # warm the cached scan/decode executables outside the timed region
+    mem.scrub(page_words=page_words)
+
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        rep = mem.scrub(page_words=page_words)
+        assert rep["flagged"] == 0
+    dt_clean = (time.perf_counter() - t0) / repeats
+
+    mem.inject(asymmetric_adjacent(code.p, eps, eps),
+               key=jax.random.PRNGKey(7))
+    t0 = time.perf_counter()
+    rep = mem.scrub(page_words=page_words)
+    dt_dirty = time.perf_counter() - t0
+    assert rep["backend"] == backend
+
+    tag = {"code": code_name, "backend": backend,
+           "page_words": page_words or 0, "mbytes": round(mbytes, 3),
+           "words": n_words, "pages": rep["pages"]}
+    rows = [
+        dict(tag, section="scan_bandwidth", op="scrub_clean",
+             seconds=round(dt_clean, 6),
+             mcells_per_s=round(cells / dt_clean / 1e6, 3)),
+        dict(tag, section="scan_bandwidth", op="scrub_corrupted",
+             seconds=round(dt_dirty, 6),
+             mcells_per_s=round(cells / dt_dirty / 1e6, 3),
+             flagged=rep["flagged"], corrected=rep["corrected"],
+             uncorrectable=rep["uncorrectable"]),
+    ]
+    return rows, mem.stored("blob").enc.copy()
+
+
+def main(quick: bool = False):
+    if quick:
+        code_name, mbytes, eps, chunk, page, reps = \
+            "wl160_r08", 0.0625, 1e-3, 128, 64, 2
+    else:
+        code_name, mbytes, eps, chunk, page, reps = \
+            "wl1024_r08", 4.0, 1e-4, 256, 2048, 3
+
+    rows = []
+    repaired = {}
+    for backend in ("host", "device"):
+        for page_words in (None, page):
+            r, enc = _bench_backend(code_name, backend, mbytes, eps,
+                                    page_words, chunk, reps)
+            rows.extend(r)
+            repaired[(backend, page_words)] = enc
+
+    # acceptance: every (backend, paging) sweep repairs storage identically
+    ref_key = ("host", None)
+    identical = all(np.array_equal(repaired[ref_key], enc)
+                    for enc in repaired.values())
+    by = {(r["backend"], r["page_words"]): r["mcells_per_s"] for r in rows
+          if r["op"] == "scrub_clean"}
+    rows.append({
+        "section": "acceptance", "code": code_name,
+        "repairs_identical": identical,
+        "host_mcells_per_s": by[("host", 0)],
+        "device_mcells_per_s": by[("device", 0)],
+        "device_is_interpreted": jax.default_backend() != "tpu",
+        "pass": identical,
+    })
+    assert identical, "backend/paging sweeps repaired storage differently"
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke mode: small code, tiny array")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write measurement rows as JSON")
+    ap.add_argument("--rows", default=DEFAULT_PATH, metavar="PATH",
+                    help="append standardized rows here ('' disables)")
+    args = ap.parse_args()
+    if args.json:        # fail fast on an unwritable path, not after minutes
+        with open(args.json, "a"):
+            pass
+    out = main(quick=args.quick)
+    for row in out:
+        print(row)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=2, default=str)
+    if args.rows:
+        append_rows(args.rows, "scrub", out)

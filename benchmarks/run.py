@@ -17,6 +17,7 @@ BENCHES = [
     ("table2_efficiency", "benchmarks.bench_ecc_efficiency"),
     ("decoder_throughput_fig5", "benchmarks.bench_decoder_throughput"),
     ("memory_mode", "benchmarks.bench_memory_mode"),
+    ("scrub_engine", "benchmarks.bench_scrub"),
     ("dse_fig7", "benchmarks.bench_dse"),
 ]
 

@@ -128,9 +128,13 @@ def protected_pim_matmul_budgeted(x: jnp.ndarray, W_enc: jnp.ndarray,
     take = flagged[idx]
     yb = yb.at[idx].set(jnp.where(take[:, None], sel_corr, yb[idx]))
 
-    n_flagged = flagged.sum()
-    overflow = jnp.maximum(n_flagged - k, 0) > 0
-    uncorrected = detected & jnp.broadcast_to(overflow, detected.shape)
+    # a word stays uncorrected when the decoder gave up on it (per-word
+    # detect_fail scattered back to its slot) or when the budget never
+    # reached it (flagged but unselected); corrected words are NOT blamed
+    # for an overflow elsewhere in the batch.
+    word_fail = jnp.zeros(B * nb, bool).at[idx].set(res.detect_fail & take)
+    selected = jnp.zeros(B * nb, bool).at[idx].set(take)
+    uncorrected = (word_fail | (flagged & ~selected)).reshape(B, nb)
     data = yb.reshape(B, nb, code.n)[..., :code.k].reshape(B, nb * code.k)
     return ProtectedResult(data, detected, uncorrected)
 

@@ -171,3 +171,37 @@ def decode_sharded(code, y, *, mesh: Optional[Mesh] = None,
         res = DecodeResult(res.symbols[:B], res.llv_totals[:B],
                            res.detect_fail[:B], res.iterations[:B])
     return y_corr, res
+
+
+def scan_syndromes_sharded(code, y, *, mesh: Optional[Mesh] = None,
+                           axis_name: str = "data",
+                           interpret: Optional[bool] = None):
+    """Fan the fused scrub syndrome scan across devices along the batch axis.
+
+    y: (B, n) stored level-words -> (B,) bool flagged mask. Like
+    `decode_sharded`, B is padded to a mesh-size multiple with all-zero words
+    (valid codewords — never flagged) and the pad is stripped; the scan is
+    per-word independent, so the shard_map introduces no collectives. Each
+    device runs `repro.kernels.ops.scan_syndromes` (the fused Pallas kernel)
+    on its local page slice — this is the `MemoryController` device backend's
+    multi-device path for paged scrub sweeps.
+    """
+    from repro.kernels.ops import scan_syndromes
+
+    if mesh is None:
+        mesh = data_mesh(axis_name)
+    ndev = mesh.shape[axis_name]
+    B = y.shape[0]
+    pad = (-B) % ndev
+    if pad:
+        y = jax.numpy.concatenate(
+            [y, jax.numpy.zeros((pad, y.shape[1]), y.dtype)], axis=0)
+    ht = jax.numpy.asarray(code.H.T, jax.numpy.int32)
+
+    def local_scan(y_local):
+        return scan_syndromes(y_local, ht, code.p, interpret=interpret)
+
+    spec = P(axis_name)
+    flags = compat_shard_map(local_scan, mesh=mesh, in_specs=spec,
+                             out_specs=spec)(y)
+    return flags[:B] if pad else flags

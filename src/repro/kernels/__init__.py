@@ -1,4 +1,4 @@
 """Pallas TPU kernels for the paper's compute hot-spots (validated on CPU with
 interpret=True against the pure-jnp oracles in ref.py)."""
 from . import ops, ref
-from .ops import fbp_cn, fbp_cn_batched, gf_matmul, pim_mac
+from .ops import fbp_cn, fbp_cn_batched, gf_matmul, pim_mac, scan_syndromes

@@ -1,0 +1,20 @@
+"""Backend dispatch shared by every Pallas kernel entry point.
+
+Kernels compile natively only on TPU; everywhere else (CPU unit tests,
+GPU hosts without a Mosaic backend) they run under the Pallas interpreter.
+Both the jitted public wrappers in `ops.py` and the raw `*_pallas`
+entry points resolve their `interpret=None` default through this one
+predicate so direct callers never silently interpret on a real TPU.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def interpret_default() -> bool:
+    """True (interpret mode) everywhere except a real TPU backend."""
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    return interpret_default() if interpret is None else bool(interpret)

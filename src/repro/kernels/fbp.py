@@ -27,6 +27,8 @@ from jax.experimental import pallas as pl
 
 from repro.core.llv import NEG_INF
 
+from .backend import resolve_interpret
+
 DEFAULT_TILE_N = 512
 
 
@@ -85,10 +87,12 @@ def _fbp_kernel(m_ref, o_ref, *, dc: int, p: int):
 
 
 def fbp_cn_pallas(m_hat: jnp.ndarray, p: int, *, tile_n: int = DEFAULT_TILE_N,
-                  interpret: bool = True) -> jnp.ndarray:
+                  interpret: bool | None = None) -> jnp.ndarray:
     """m_hat: (N, dc, p) -> reflected extrinsic messages (N, dc, p).
 
-    N is padded to a tile multiple by the caller (`ops.fbp_cn`).
+    N is padded to a tile multiple by the caller (`ops.fbp_cn`). `interpret`
+    defaults to the shared backend dispatch (compiled on TPU, interpreted
+    elsewhere) so direct callers match `ops.fbp_cn`.
     """
     N, dc, pp = m_hat.shape
     assert pp == p
@@ -100,5 +104,5 @@ def fbp_cn_pallas(m_hat: jnp.ndarray, p: int, *, tile_n: int = DEFAULT_TILE_N,
         in_specs=[pl.BlockSpec((tile_n, dc, p), lambda i: (i, 0, 0))],
         out_specs=pl.BlockSpec((tile_n, dc, p), lambda i: (i, 0, 0)),
         grid=(N // tile_n,),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(m_hat)

@@ -16,11 +16,8 @@ import jax.numpy as jnp
 from . import fbp as _fbp
 from . import gf_matmul as _gfm
 from . import pim_mac as _pm
+from .backend import interpret_default as _interpret_default
 from repro.core.llv import NEG_INF
-
-
-def _interpret_default() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 def _pad_to(x, axis, multiple, value=0):
@@ -77,6 +74,35 @@ def gf_matmul(a: jnp.ndarray, b: jnp.ndarray, p: int, *, bm: int = 128,
     out = _gfm.gf_matmul_pallas(a, b, p, bm=bm_, bn=bn_, bk=bk_,
                                 interpret=interpret)
     return out[:M, :N]
+
+
+@functools.partial(jax.jit, static_argnames=("p", "bm", "bk", "interpret"))
+def scan_syndromes(y: jnp.ndarray, ht: jnp.ndarray, p: int, *, bm: int = 128,
+                   bk: int = 128,
+                   interpret: bool | None = None) -> jnp.ndarray:
+    """Fused scrub syndrome scan: (B, n) words x (n, c) Hᵀ -> (B,) bool flags.
+
+    flags[i] = any((y[i] @ ht) % p != 0); the mod + any reduction is fused
+    into the matmul's last K-step so only the mask leaves the kernel. Pad
+    rows (zero words are valid codewords) and pad check columns (all-zero
+    Hᵀ columns accumulate 0 ≡ 0 mod p) can never raise a flag.
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    M, K = y.shape
+    _, C = ht.shape
+    # the kernel accumulator is int32: every syndrome sum is bounded by
+    # K*(p-1)^2, which must stay below 2^31 or flags silently wrap. The
+    # controller routes such codes to its exact int64 host path.
+    assert K * (p - 1) ** 2 < 2 ** 31, (
+        f"scan_syndromes int32 bound exceeded: {K} * ({p}-1)^2 >= 2^31")
+    bm_, bk_ = min(bm, max(8, M)), min(bk, max(8, K))
+    y, _ = _pad_to(y, 0, bm_)
+    y, _ = _pad_to(y, 1, bk_)
+    ht, _ = _pad_to(ht, 0, bk_)
+    ht, _ = _pad_to(ht, 1, _gfm.FLAG_LANES)
+    out = _gfm.scan_syndromes_pallas(y, ht, p, bm=bm_, bk=bk_,
+                                     interpret=interpret)
+    return out[:M, 0] != 0
 
 
 @functools.partial(jax.jit, static_argnames=("row_parallelism", "adc_levels",

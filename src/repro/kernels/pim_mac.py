@@ -15,6 +15,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .backend import resolve_interpret
+
 
 def _pim_mac_kernel(x_ref, w_ref, o_ref, *, groups_per_block: int, R: int,
                     adc_half: int, nk: int):
@@ -41,7 +43,7 @@ def _pim_mac_kernel(x_ref, w_ref, o_ref, *, groups_per_block: int, R: int,
 def pim_mac_pallas(x: jnp.ndarray, w: jnp.ndarray, *, row_parallelism: int,
                    adc_levels: int, bm: int = 128, bn: int = 128,
                    groups_per_block: int = 1,
-                   interpret: bool = True) -> jnp.ndarray:
+                   interpret: bool | None = None) -> jnp.ndarray:
     """x: (B, K) int, w: (K, N) int -> (B, N) int32 group-quantized MAC.
 
     K must be a multiple of row_parallelism * groups_per_block (caller pads —
@@ -67,5 +69,5 @@ def pim_mac_pallas(x: jnp.ndarray, w: jnp.ndarray, *, row_parallelism: int,
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         grid=(B // bm, N // bn, nk),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(x, w)

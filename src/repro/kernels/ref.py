@@ -26,6 +26,11 @@ def gf_matmul_ref(a: jnp.ndarray, b: jnp.ndarray, p: int) -> jnp.ndarray:
     return (a.astype(jnp.int32) @ b.astype(jnp.int32)) % p
 
 
+def scan_syndromes_ref(y: jnp.ndarray, ht: jnp.ndarray, p: int) -> jnp.ndarray:
+    """Unfused scrub-scan oracle: full syndrome matrix, then the any-reduce."""
+    return (gf_matmul_ref(y, ht, p) != 0).any(axis=1)
+
+
 def pim_mac_ref(x: jnp.ndarray, w: jnp.ndarray, *, row_parallelism: int,
                 adc_levels: int) -> jnp.ndarray:
     """Row-grouped ADC-quantized MAC. x: (B, K), w: (K, N); K divisible by the

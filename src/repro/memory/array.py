@@ -132,8 +132,10 @@ class ProtectedMemoryArray:
             levels = st.enc.astype(np.int64) % self.code.p
         syms = levels[:, :self.code.k].reshape(-1)
         raw = desymbolize_bytes(syms, st.nbytes, self.code.p)
-        arr = np.frombuffer(raw, dtype=np.dtype(st.dtype))
-        out = arr.reshape(st.shape)
+        # frombuffer over `bytes` is a read-only view; hand back a writable
+        # copy so callers can mutate what they read (it's their tensor).
+        arr = np.frombuffer(raw, dtype=np.dtype(st.dtype)).reshape(st.shape)
+        out = arr.copy()
         self.controller.tick(self.code, self._store)
         return out
 
@@ -170,6 +172,21 @@ class ProtectedMemoryArray:
             st.enc = new
         return changed
 
-    def scrub(self) -> dict:
-        """Explicit full sweep (any policy): scan + repair storage."""
-        return self.controller.scrub(self.code, self._store)
+    def iter_pages(self, page_words: Optional[int] = None):
+        """Writable (b, n) pages over the stored words (`page_words` rows
+        per page; one page per tensor when None) — the streaming surface
+        for `scrub_pages` and external scrub services."""
+        return self.controller.iter_pages(self._store, page_words)
+
+    def scrub(self, *, page_words: Optional[int] = None) -> dict:
+        """Explicit full sweep (any policy): scan + repair storage.
+        `page_words` streams the sweep in fixed-size pages (incremental
+        scrubbing for arrays larger than device memory)."""
+        return self.controller.scrub(self.code, self._store,
+                                     page_words=page_words)
+
+    def scrub_pages(self, pages) -> dict:
+        """Sweep an explicit page iterator (see `iter_pages`) — the hook
+        for scrubbing external storage through this array's code and
+        controller."""
+        return self.controller.scrub_pages(self.code, pages)

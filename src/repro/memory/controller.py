@@ -14,18 +14,36 @@ refresh):
   visible) and repaired in place. `interval` counts read/write operations
   between automatic sweeps; `scrub()` can also be called explicitly.
 
-All policies share the same read path: a cheap host-side syndrome scan over
-the stored words, then the iterative decoder runs ONLY on flagged words,
+All policies share the same read path: a cheap syndrome scan over the
+stored words, then the iterative decoder runs ONLY on flagged words,
 gathered into fixed-size chunks so one jitted executable serves every read
 (the same trick as `repro.core.protected.decode_stream`). Per-policy
 counters (detected / corrected / uncorrectable / writebacks / scrub
 bandwidth) live in `ControllerStats`.
+
+The scan itself has two backends (`scan_backend=`):
+
+- **host** — float32 BLAS matmul (exact while n·(p−1)² < 2²⁴; beyond that
+  it degrades to an exact-but-slower int64 path automatically);
+- **device** — the fused Pallas `repro.kernels.ops.scan_syndromes` kernel:
+  mod-p + any-reduce fused into the matmul epilogue, so only the (B,) flag
+  mask crosses back to the host, never the syndrome matrix. Pages are
+  streamed through ONE cached fixed-shape executable (`scan_block` rows)
+  and fanned across local devices via the `decode_sharded` mesh when more
+  than one is visible.
+- **auto** (default) — device on TPU, host elsewhere (interpret-mode Pallas
+  on CPU is a correctness path, not a fast path).
+
+Scrubbing is **paged**: `scrub(page_words=...)` streams fixed-size pages of
+stored words (`scrub_pages` accepts any iterator of writable (b, n) row
+views) so arrays larger than device memory scrub incrementally; repairs are
+written back through the page views and per-page stats ride in the report.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, Optional, Tuple
+from typing import Dict, Iterable, Iterator, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -36,6 +54,11 @@ from repro.core.decode import decode_integers
 
 __all__ = ["ControllerStats", "MemoryController", "WritebackController",
            "ScrubController", "make_controller"]
+
+# per-page entries kept in a sweep report; totals keep accumulating past
+# this, so a million-page archive sweep stays one-page-resident instead of
+# holding millions of stat dicts
+MAX_PAGE_STATS = 1024
 
 
 @dataclasses.dataclass
@@ -73,7 +96,12 @@ class MemoryController:
 
     def __init__(self, *, n_iters: int = 10, damping: float = 0.3,
                  llv_scale: float = 4.0, llv_mode: str = "manhattan",
-                 chunk_size: int = 256, use_sharded: Optional[bool] = None):
+                 chunk_size: int = 256, use_sharded: Optional[bool] = None,
+                 scan_backend: str = "auto", scan_block: int = 512,
+                 page_words: Optional[int] = None):
+        if scan_backend not in ("auto", "host", "device"):
+            raise ValueError(f"scan_backend {scan_backend!r} not in "
+                             "('auto', 'host', 'device')")
         self.n_iters = n_iters
         self.damping = damping
         self.llv_scale = llv_scale
@@ -81,8 +109,13 @@ class MemoryController:
         self.chunk_size = chunk_size
         self.use_sharded = (len(jax.devices()) > 1 if use_sharded is None
                             else use_sharded)
+        self.scan_backend = scan_backend
+        self.scan_block = scan_block
+        self.page_words = page_words          # default paging for sweeps
         self.stats = ControllerStats()
         self._jit_cache: Dict[int, Tuple[LDPCCode, object]] = {}
+        self._scan_cache: Dict[int, Tuple[LDPCCode, object]] = {}
+        self._host_ht_cache: Dict[int, Tuple[LDPCCode, np.ndarray]] = {}
 
     # -- decode plumbing ----------------------------------------------------
 
@@ -113,6 +146,17 @@ class MemoryController:
         self._jit_cache[id(code)] = (code, fn)
         return fn
 
+    @staticmethod
+    def _pad_block(chunk: np.ndarray, size: int, n: int):
+        """Zero-pad a ragged tail block to the executable's fixed row count
+        (zero words are valid codewords: unflagged, converge immediately).
+        Returns (padded int32 block, true row count)."""
+        chunk = chunk.astype(np.int32)
+        b = chunk.shape[0]
+        if b < size:
+            chunk = np.concatenate([chunk, np.zeros((size - b, n), np.int32)])
+        return chunk, b
+
     def _decode_words(self, code: LDPCCode, words: np.ndarray):
         """Decode (B, n) stored level-words -> (symbols (B, n), fail (B,)).
         Chunks are padded to `chunk_size` so one executable serves any B."""
@@ -122,27 +166,99 @@ class MemoryController:
         syms = np.empty((B, code.n), np.int64)
         fail = np.empty(B, bool)
         for lo in range(0, B, cs):
-            chunk = words[lo:lo + cs].astype(np.int32)
-            b = chunk.shape[0]
-            if b < cs:
-                chunk = np.concatenate(
-                    [chunk, np.zeros((cs - b, code.n), np.int32)])
+            chunk, b = self._pad_block(words[lo:lo + cs], cs, code.n)
             _y, res = fn(jnp.asarray(chunk))
             syms[lo:lo + b] = np.asarray(res.symbols[:b])
             fail[lo:lo + b] = np.asarray(res.detect_fail[:b])
         return syms, fail
 
-    @staticmethod
-    def _scan_syndromes(code: LDPCCode, enc: np.ndarray) -> np.ndarray:
-        """Host-side syndrome scan -> flagged mask (B,). This is the cheap
-        always-on part of the read path; decode runs only on flags.
+    # -- syndrome-scan backends ---------------------------------------------
 
-        Runs in float32 so the matmul hits BLAS (NumPy integer matmul is a
-        slow C loop — this is the scrub-bandwidth hot path). Exact because
-        every accumulated product is bounded by n*(p-1)^2 << 2^24."""
-        assert code.n * (code.p - 1) ** 2 < 2 ** 24
-        s = enc.astype(np.float32) @ code.H.T.astype(np.float32)
-        return np.any(s.astype(np.int64) % code.p != 0, axis=1)
+    def resolved_scan_backend(self) -> str:
+        if self.scan_backend == "auto":
+            return "device" if jax.default_backend() == "tpu" else "host"
+        return self.scan_backend
+
+    def _scan_route(self, code: LDPCCode) -> str:
+        """The backend a scan of `code` ACTUALLY runs on: the device kernel
+        accumulates in int32, so fields/words beyond its exact bound route
+        to the host scan (whose own fallback is int64) even when the device
+        backend is configured."""
+        if (self.resolved_scan_backend() == "device"
+                and code.n * (code.p - 1) ** 2 < 2 ** 31):
+            return "device"
+        return "host"
+
+    def _scan_syndromes(self, code: LDPCCode, enc: np.ndarray) -> np.ndarray:
+        """Syndrome scan -> flagged mask (B,). This is the cheap always-on
+        part of the read path; decode runs only on flags."""
+        if self._scan_route(code) == "device":
+            return self._scan_syndromes_device(code, enc)
+        return self._scan_syndromes_host(code, enc)
+
+    def _host_ht(self, code: LDPCCode, dtype) -> np.ndarray:
+        """Per-code cache of the transposed+cast check matrix: paged sweeps
+        call the host scan once per page, and the (c, n) conversion must not
+        be repaid on every page (mirrors `_scanner`'s cached executable)."""
+        hit = self._host_ht_cache.get(id(code))
+        if hit is not None and hit[0] is code and hit[1].dtype == dtype:
+            return hit[1]
+        ht = code.H.T.astype(dtype)
+        self._host_ht_cache[id(code)] = (code, ht)
+        return ht
+
+    def _scan_syndromes_host(self, code: LDPCCode,
+                             enc: np.ndarray) -> np.ndarray:
+        """float32 BLAS scan (NumPy integer matmul is a slow C loop — this
+        is the host scrub-bandwidth hot path), exact while every accumulated
+        product is bounded by n*(p-1)^2 < 2^24; large-field / long-word
+        codes beyond that fall back to the exact int64 path."""
+        if code.n * (code.p - 1) ** 2 < 2 ** 24:
+            s = (enc.astype(np.float32)
+                 @ self._host_ht(code, np.float32)).astype(np.int64)
+        else:
+            s = enc.astype(np.int64) @ self._host_ht(code, np.int64)
+        return np.any(s % code.p != 0, axis=1)
+
+    def _scanner(self, code: LDPCCode):
+        """One jitted fixed-shape (scan_block, n) fused scan per code,
+        shard_map'd over the local device mesh when more than one device is
+        visible (same dispatch shape as `_decoder`)."""
+        hit = self._scan_cache.get(id(code))
+        if hit is not None and hit[0] is code:
+            return hit[1]
+
+        if self.use_sharded:
+            from repro.distributed.sharding import (data_mesh,
+                                                    scan_syndromes_sharded)
+            mesh = data_mesh()
+
+            def run(y):
+                return scan_syndromes_sharded(code, y, mesh=mesh)
+        else:
+            from repro.kernels.ops import scan_syndromes
+            ht = jnp.asarray(code.H.T, jnp.int32)
+
+            def run(y):
+                return scan_syndromes(y, ht, code.p)
+
+        fn = jax.jit(run)
+        self._scan_cache[id(code)] = (code, fn)
+        return fn
+
+    def _scan_syndromes_device(self, code: LDPCCode,
+                               enc: np.ndarray) -> np.ndarray:
+        """Fused Pallas scan: pages are streamed through one cached
+        executable in fixed `scan_block`-row slices (zero-padded tails are
+        valid codewords — never flagged); only the (b,) mask comes back."""
+        fn = self._scanner(code)
+        B = enc.shape[0]
+        sb = self.scan_block
+        flags = np.empty(B, bool)
+        for lo in range(0, B, sb):
+            blk, b = self._pad_block(enc[lo:lo + sb], sb, code.n)
+            flags[lo:lo + b] = np.asarray(fn(jnp.asarray(blk)))[:b]
+        return flags
 
     def _correct(self, code: LDPCCode, enc: np.ndarray):
         """-> (corrected levels (B, n), flagged, fail) without stats."""
@@ -179,22 +295,77 @@ class MemoryController:
     def tick(self, code: LDPCCode, store: dict) -> None:
         pass                        # only the scrub policy acts on ticks
 
-    def scrub(self, code: LDPCCode, store: dict) -> dict:
+    @staticmethod
+    def iter_pages(store: dict,
+                   page_words: Optional[int] = None) -> Iterator[np.ndarray]:
+        """Yield writable (b, n) row views over the stored words —
+        `page_words` rows per page (ragged tails allowed), or one page per
+        tensor when None. Repairs written into a page propagate to backing
+        storage, so any page iterator with the same contract (e.g. over an
+        mmap'd checkpoint archive) can be fed to `scrub_pages` directly."""
+        if page_words is not None and page_words <= 0:
+            raise ValueError(f"page_words must be positive, got {page_words}")
+
+        def gen():
+            for st in store.values():
+                enc = st.enc
+                if page_words is None:
+                    yield enc
+                else:
+                    for lo in range(0, enc.shape[0], page_words):
+                        yield enc[lo:lo + page_words]
+        return gen()
+
+    def scrub(self, code: LDPCCode, store: dict, *,
+              page_words: Optional[int] = None) -> dict:
         """Full-array sweep: scan every stored word, repair flagged words in
         place (every policy may be scrubbed explicitly; only
-        `ScrubController` does it automatically). Returns a report with the
-        sweep's counts and scan bandwidth."""
+        `ScrubController` does it automatically). `page_words` (default: the
+        controller's `page_words`) streams the sweep in fixed-size pages so
+        arrays larger than device memory scrub incrementally. Returns a
+        report with the sweep's counts, scan bandwidth, and per-page stats."""
+        if page_words is None:
+            page_words = self.page_words
+        return self.scrub_pages(code, self.iter_pages(store, page_words),
+                                page_words=page_words)
+
+    def scrub_pages(self, code: LDPCCode, pages: Iterable[np.ndarray], *,
+                    page_words: Optional[int] = None) -> dict:
+        """Paged sweep over any iterator of writable (b, n) level-word
+        pages: scan each page (host BLAS or the fused device kernel, per
+        `scan_backend`), batch-decode only the flagged words, and write
+        repairs back through the page views. One cached scan executable and
+        one cached decode executable serve every page, so the stream never
+        recompiles; pages are consumed lazily (one page resident at a
+        time)."""
         t0 = time.perf_counter()
-        words = flagged_n = corrected_n = fail_n = 0
-        for st in store.values():
-            out, flagged, fail = self._correct(code, st.enc)
-            ok = flagged & ~fail
-            if ok.any():
-                st.enc[ok] = out[ok].astype(st.enc.dtype)
-            words += st.enc.shape[0]
-            flagged_n += int(flagged.sum())
-            corrected_n += int(ok.sum())
-            fail_n += int(fail.sum())
+        words = flagged_n = corrected_n = fail_n = n_pages = 0
+        page_stats = []
+        for page in pages:
+            n_pages += 1
+            tp = time.perf_counter()
+            # scan-only on clean pages: the full corrected-levels copy that
+            # `_correct` builds for reads is skipped, decode touches only
+            # flagged rows, and repairs come straight from decoder symbols
+            flagged = self._scan_syndromes(code, page)
+            pg_flagged = int(flagged.sum())
+            pg_fail = 0
+            if pg_flagged:
+                syms, f = self._decode_words(code, page[flagged])
+                pg_fail = int(f.sum())
+                rows = np.flatnonzero(flagged)[~f]
+                if rows.size:
+                    page[rows] = syms[~f].astype(page.dtype)
+            words += page.shape[0]
+            flagged_n += pg_flagged
+            corrected_n += pg_flagged - pg_fail
+            fail_n += pg_fail
+            if n_pages <= MAX_PAGE_STATS:
+                page_stats.append({
+                    "words": int(page.shape[0]), "flagged": pg_flagged,
+                    "corrected": pg_flagged - pg_fail,
+                    "uncorrectable": pg_fail,
+                    "seconds": time.perf_counter() - tp})
         dt = time.perf_counter() - t0
         self.stats.scrub_rounds += 1
         self.stats.scrub_words += words
@@ -202,9 +373,13 @@ class MemoryController:
         self.stats.scrub_corrected += corrected_n
         self.stats.scrub_uncorrectable += fail_n
         self.stats.scrub_seconds += dt
-        return {"policy": self.policy, "words_scanned": words,
+        return {"policy": self.policy, "backend": self._scan_route(code),
+                "words_scanned": words,
                 "cells_scanned": words * code.n, "flagged": flagged_n,
                 "corrected": corrected_n, "uncorrectable": fail_n,
+                "pages": n_pages, "page_words": page_words,
+                "page_stats": page_stats,
+                "page_stats_truncated": n_pages > MAX_PAGE_STATS,
                 "seconds": dt,
                 "bandwidth_cells_per_s": words * code.n / dt if dt else 0.0}
 

@@ -42,6 +42,41 @@ def test_gf_matmul_matches_ref(rng, M, K, N, p, dtype):
     assert (np.asarray(out_k) < p).all() and (np.asarray(out_k) >= 0).all()
 
 
+@pytest.mark.parametrize("M,K,C", [(8, 8, 8), (37, 80, 16), (128, 128, 128),
+                                   (200, 320, 60), (1, 512, 3)])
+@pytest.mark.parametrize("p", [2, 3, 7])
+def test_scan_syndromes_matches_ref(rng, M, K, C, p):
+    y = jnp.asarray(rng.integers(0, p, (M, K)), jnp.int32)
+    ht = jnp.asarray(rng.integers(0, p, (K, C)), jnp.int32)
+    # plant guaranteed-clean rows so the test discriminates (zero words have
+    # zero syndrome under any H)
+    y = y.at[::3].set(0)
+    out = np.asarray(ops.scan_syndromes(y, ht, p))
+    exp = np.asarray(ref.scan_syndromes_ref(y, ht, p))
+    assert out.shape == (M,) and out.dtype == bool
+    assert (out == exp).all()
+    assert not out[::3].any()
+
+
+def test_scan_syndromes_codeword_sensitivity(rng):
+    """Valid codewords never flag; any single-cell hit always flags (H has
+    no zero columns by construction, dv >= 3)."""
+    from repro.core import get_code, np_encode_words
+    code = get_code("wl80_r08")
+    w = rng.integers(0, code.p, (32, code.k))
+    enc = np_encode_words(w, code)
+    ht = jnp.asarray(code.H.T, jnp.int32)
+    clean = np.asarray(ops.scan_syndromes(jnp.asarray(enc, jnp.int32),
+                                          ht, code.p))
+    assert not clean.any()
+    hit = enc.copy()
+    cols = rng.integers(0, code.n, 32)
+    hit[np.arange(32), cols] = (hit[np.arange(32), cols] + 1) % code.p
+    flagged = np.asarray(ops.scan_syndromes(jnp.asarray(hit, jnp.int32),
+                                            ht, code.p))
+    assert flagged.all()
+
+
 @pytest.mark.parametrize("B,K,N", [(4, 64, 16), (16, 96, 40), (128, 256, 128)])
 @pytest.mark.parametrize("R,adc", [(0, 0), (32, 0), (32, 7), (16, 15)])
 def test_pim_mac_matches_ref(rng, B, K, N, R, adc):

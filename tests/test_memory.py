@@ -201,6 +201,162 @@ def test_import_export_stored_roundtrip(rng):
     assert np.array_equal(dst.read("t"), t)
 
 
+def test_read_returns_writable_array(rng):
+    """Regression: reads came back as read-only frombuffer views, so callers
+    mutating a corrected read crashed."""
+    mem = _array("basic")
+    t = rng.normal(size=(6, 5)).astype(np.float32)
+    mem.write("t", t)
+    out = mem.read("t")
+    assert out.flags.writeable
+    out[0, 0] = 123.0                              # must not raise
+    assert np.array_equal(mem.read("t"), t)        # storage untouched
+
+
+# ---------------------------------------------------------------------------
+# scrub engine: device scan backend + paged sweeps
+# ---------------------------------------------------------------------------
+
+from repro.core import CODE_REGISTRY, np_encode_words  # noqa: E402
+from repro.memory.controller import MemoryController  # noqa: E402
+
+
+def _corrupted_words(code, rng, n_words=24, n_clean=8):
+    """(n_words, n) valid codewords with single-cell hits beyond n_clean."""
+    w = rng.integers(0, code.p, (n_words, code.k))
+    enc = np_encode_words(w, code).astype(np.int8)
+    rows = np.arange(n_clean, n_words)
+    cols = rng.integers(0, code.n, rows.size)
+    enc[rows, cols] = (enc[rows, cols] + 1) % code.p
+    return enc
+
+
+@pytest.mark.parametrize("name", sorted(CODE_REGISTRY))
+def test_device_scan_matches_host_scan_all_registry_codes(name, rng):
+    """Acceptance: the fused Pallas scan's flagged mask is identical to the
+    host BLAS scan on every registry code (GF(3)/GF(5)/GF(7))."""
+    code = get_code(name)
+    enc = _corrupted_words(code, rng)
+    host = MemoryController(scan_backend="host", scan_block=16)
+    dev = MemoryController(scan_backend="device", scan_block=16,
+                           use_sharded=False)
+    mh = host._scan_syndromes(code, enc)
+    md = dev._scan_syndromes(code, enc)
+    np.testing.assert_array_equal(mh, md)
+    assert not mh[:8].any() and mh[8:].all()       # scans also correct
+
+
+def test_scan_backend_validated():
+    with pytest.raises(ValueError, match="scan_backend"):
+        MemoryController(scan_backend="gpu")
+
+
+def test_page_words_validated(rng):
+    """Regression: page_words <= 0 must raise eagerly, not silently sweep
+    zero words (negative) or crash inside range() (zero)."""
+    mem = _array("basic")
+    mem.write("t", rng.normal(size=(4, 4)).astype(np.float32))
+    for bad in (0, -1):
+        with pytest.raises(ValueError, match="page_words"):
+            mem.scrub(page_words=bad)
+
+
+def test_page_stats_bounded(rng):
+    """Sweeps past MAX_PAGE_STATS pages keep totals but cap the per-page
+    list, so huge-archive sweeps stay one-page-resident."""
+    from repro.memory import controller as ctl
+    mem = _array("basic")
+    mem.write("t", rng.normal(size=(600, 4)).astype(np.float32))
+    n_words = mem.n_words()
+    cap, ctl.MAX_PAGE_STATS = ctl.MAX_PAGE_STATS, 8
+    try:
+        rep = mem.scrub(page_words=2)
+    finally:
+        ctl.MAX_PAGE_STATS = cap
+    assert rep["pages"] == -(-n_words // 2) > 8
+    assert len(rep["page_stats"]) == 8
+    assert rep["page_stats_truncated"]
+    assert rep["words_scanned"] == n_words
+
+
+def test_paged_scrub_matches_whole_array_scrub(rng):
+    """Acceptance: paged sweeps give identical repair results to whole-array
+    scrubs, and per-page stats sum to the sweep totals."""
+    t = rng.normal(size=(128, 12)).astype(np.float32)
+    repaired = {}
+    for backend in ("host", "device"):
+        for page_words in (None, 7):
+            mem = _array("writeback", scan_backend=backend, scan_block=32)
+            mem.write("t", t)
+            mem.inject(uniform_flip(3, 2e-3), key=jax.random.PRNGKey(4))
+            rep = mem.scrub(page_words=page_words)
+            assert rep["backend"] == backend
+            assert rep["flagged"] == rep["corrected"] > 0
+            if page_words is not None:
+                assert rep["pages"] > 1
+            for key in ("words", "flagged", "corrected", "uncorrectable"):
+                total = rep["words_scanned"] if key == "words" else rep[key]
+                assert sum(pg[key] for pg in rep["page_stats"]) == total
+            assert np.array_equal(mem.read("t"), t)
+            repaired[(backend, page_words)] = mem.stored("t").enc.copy()
+    ref = repaired[("host", None)]
+    assert all(np.array_equal(ref, enc) for enc in repaired.values())
+
+
+def test_scrub_pages_accepts_external_page_iterator(rng):
+    """The paged API scrubs any iterator of writable (b, n) pages — not just
+    this array's store (the cold-storage-service surface)."""
+    mem = _array("basic", scan_backend="host")
+    code = mem.code
+    w = rng.integers(0, code.p, (40, code.k))
+    want = np_encode_words(w, code).astype(np.int8)
+    enc = want.copy()
+    rows = np.arange(10, 40)
+    cols = rng.integers(0, code.n, rows.size)
+    enc[rows, cols] = (enc[rows, cols] + 1) % code.p
+    pages = [enc[lo:lo + 9] for lo in range(0, 40, 9)]
+    rep = mem.scrub_pages(iter(pages))
+    assert rep["pages"] == 5
+    assert rep["flagged"] == rep["corrected"] == 30
+    assert np.array_equal(enc, want)               # repaired through views
+
+
+def test_big_field_scan_falls_back_to_exact_int64(rng):
+    """Regression: n*(p-1)^2 >= 2^24 used to AssertionError. The int64
+    fallback must flag nothing on valid GF(4099) codewords — the float32
+    path provably misflags every one of them at this field size."""
+    from repro.core import build_code
+    code = build_code(64, 48, p=4099, dv=4, seed=0)
+    assert code.n * (code.p - 1) ** 2 >= 2 ** 24
+    w = rng.integers(0, code.p, (32, code.k))
+    enc = np_encode_words(w, code)
+    f32 = (enc.astype(np.float32) @ code.H.T.astype(np.float32))
+    assert np.any(f32.astype(np.int64) % code.p != 0)   # f32 IS inexact here
+    host = MemoryController(scan_backend="host", use_sharded=False)
+    assert not host._scan_syndromes(code, enc).any()
+    enc[:, 0] = (enc[:, 0] + 1) % code.p
+    assert host._scan_syndromes(code, enc).all()
+
+
+def test_big_field_device_backend_routes_to_exact_host_scan(rng):
+    """The fused kernel accumulates in int32; codes past its 2^31 bound must
+    route the device backend to the exact host path instead of silently
+    wrapping."""
+    from repro.core import build_code
+    code = build_code(48, 40, p=8191, dv=4, seed=0)
+    assert code.n * (code.p - 1) ** 2 >= 2 ** 31
+    w = rng.integers(0, code.p, (16, code.k))
+    enc = np_encode_words(w, code)
+    dev = MemoryController(scan_backend="device", use_sharded=False)
+    assert dev._scan_route(code) == "host"          # routed past the kernel
+    assert not dev._scan_syndromes(code, enc).any()
+    # reports must label the backend that actually ran, not the config
+    # (clean pages: GF(8191) decode would build a (p, p) conv table)
+    assert dev.scrub_pages(code, iter([enc]))["backend"] == "host"
+    enc[:, 3] = (enc[:, 3] + 1) % code.p
+    assert dev._scan_syndromes(code, enc).all()
+
+
 # ---------------------------------------------------------------------------
 # checkpoint integration
 # ---------------------------------------------------------------------------

@@ -50,6 +50,53 @@ def test_budgeted_overflow_flagged(rng):
     assert bool(np.asarray(res.uncorrected).any())
 
 
+def _budgeted_setup(rng, err_rate):
+    code = get_code("wl40_r08")
+    W = jnp.asarray(rng.integers(-1, 2, (16, 8 * code.k)), jnp.int32)
+    We = encode_weight_matrix(W, code)
+    x = jnp.asarray(rng.integers(-1, 2, (8, 16)), jnp.int32)
+    prot = ProtectionConfig(mode="correct", n_iters=8, damping=0.3)
+    cfgp = PIMConfig(output_error_rate=err_rate)
+    return code, We, x, prot, cfgp
+
+
+def test_budgeted_overflow_spares_corrected_words(rng):
+    """Regression: on budget overflow, words the budget DID correct must not
+    be reported uncorrected — only decode failures and the flagged words the
+    budget never reached."""
+    code, We, x, prot, cfgp = _budgeted_setup(rng, 0.02)
+    res = protected_pim_matmul_budgeted(x, We, code, prot, cfgp,
+                                        key=jax.random.PRNGKey(0), budget=2)
+    det = np.asarray(res.detected)
+    unc = np.asarray(res.uncorrected)
+    assert det.sum() > 2                           # genuine overflow
+    assert not (unc & ~det).any()                  # uncorrected ⊆ detected
+    # at most `budget` words left the uncorrected set...
+    assert unc.sum() >= det.sum() - 2
+    # ...and at least one selected word was corrected and NOT blamed for
+    # the overflow (the old accounting marked every detected word)
+    assert unc.sum() < det.sum()
+
+
+def test_budgeted_reports_per_word_decode_failures(rng):
+    """Regression: per-word decoder failures within the budget were silently
+    dropped. With a budget covering every flagged word, the budgeted path's
+    uncorrected mask must equal the full path's detect_fail exactly."""
+    for err_rate in (0.003, 0.25):                 # sparse and flooded
+        code, We, x, prot, cfgp = _budgeted_setup(rng, err_rate)
+        key = jax.random.PRNGKey(0)
+        budg = protected_pim_matmul_budgeted(x, We, code, prot, cfgp,
+                                             key=key, budget=64)
+        full = protected_pim_matmul(x, We, code, prot, cfgp, key=key)
+        np.testing.assert_array_equal(np.asarray(budg.detected),
+                                      np.asarray(full.detected))
+        np.testing.assert_array_equal(np.asarray(budg.uncorrected),
+                                      np.asarray(full.uncorrected))
+    # the flooded regime must actually contain decoder failures, or the
+    # equality above proves nothing about failure accounting
+    assert np.asarray(full.uncorrected).sum() > 0
+
+
 _SHARD_SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

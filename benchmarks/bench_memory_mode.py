@@ -23,7 +23,9 @@ import time
 import jax
 import numpy as np
 
-from repro.memory import (ProtectedMemoryArray, asymmetric_adjacent,
+from repro.memory import (HammingSECDEDScheme, ModuloParityScheme,
+                          NBLDPCScheme, ProtectedMemoryArray,
+                          UnprotectedScheme, asymmetric_adjacent,
                           paper_schemes, run_campaign, select_acceptance_row)
 from repro.core import get_code
 
@@ -36,7 +38,7 @@ def _throughput_rows(code_name: str, mbytes: float, eps: float,
     nbytes = int(mbytes * 2 ** 20)
     rng = np.random.default_rng(0)
     payload = rng.integers(0, 256, nbytes, np.uint8)
-    noise = asymmetric_adjacent(3, eps, eps)
+    noise = asymmetric_adjacent(get_code(code_name).p, eps, eps)
     rows = []
     for policy in ("basic", "writeback", "scrub"):
         mem = ProtectedMemoryArray(code_name, controller=policy,
@@ -99,7 +101,40 @@ def _campaign_rows(code_name: str, raw_bers, trials: int,
     return rows
 
 
-def main(quick: bool = False):
+def _mlc_rows(code_name: str, raw_bers, trials: int, hamming_trials: int):
+    """GF(5)/GF(7) multi-level-cell end-to-end (ROADMAP item): the campaign
+    under a TRUE multi-level `LevelTransition` channel — asymmetric
+    adjacent-level confusion over all p levels (conditional error values
+    drawn from the channel's own transition matrix, not uniform flips) —
+    plus protected-array throughput under the same channel."""
+    code = get_code(code_name)
+    # 2:1 up/down asymmetry: conductance overlap is wider toward the
+    # high-resistance state (see repro.memory.channel)
+    ch = asymmetric_adjacent(code.p, 2e-3, 1e-3)
+    schemes = [
+        NBLDPCScheme(code, ch, n_iters=12, damping=0.3,
+                     name=f"nbldpc_mlc_n{code.n}_gf{code.p}"),
+        HammingSECDEDScheme(),
+        ModuloParityScheme(k_data=32, q=code.p),
+        UnprotectedScheme(),
+    ]
+    out = run_campaign(schemes, raw_bers, trials=trials,
+                       hamming_trials=hamming_trials)
+    rows = [{"section": "ber_campaign_mlc", "code": code_name,
+             "gf": code.p, "channel": "asymmetric_adjacent(2e-3,1e-3)", **r}
+            for r in out["rows"]]
+    acc = select_acceptance_row(out["rows"])
+    if acc is not None:
+        rows.append({"section": "acceptance_mlc", "code": code_name,
+                     "gf": code.p, **acc,
+                     "pass": bool(acc["nbldpc_improvement"] >= 10.0)})
+    rows += [{**r, "section": "throughput_mlc", "gf": code.p}
+             for r in _throughput_rows(code_name, mbytes=0.125, eps=1e-3,
+                                       chunk_size=128)]
+    return rows
+
+
+def main(quick: bool = False, mlc: bool = False):
     if quick:
         tput = _throughput_rows("wl160_r08", mbytes=0.125, eps=1e-3,
                                 chunk_size=128)
@@ -112,13 +147,24 @@ def main(quick: bool = False):
             "wl1024_r08",
             [3e-2, 2e-2, 1e-2, 5e-3, 2e-3, 1e-3, 3e-4, 1e-4, 1e-5],
             trials=64, hamming_trials=4096)
-    return tput + camp
+    out = tput + camp
+    if mlc:
+        bers = ([1e-2, 1e-3] if quick
+                else [3e-2, 1e-2, 5e-3, 1e-3, 3e-4, 1e-4])
+        trials = 16 if quick else 48
+        for name in ("wl160_r08_gf5", "wl160_r08_gf7"):
+            out += _mlc_rows(name, bers, trials=trials,
+                             hamming_trials=512 if quick else 2048)
+    return out
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke mode: small code, few trials")
+    ap.add_argument("--mlc", action="store_true",
+                    help="add the GF(5)/GF(7) multi-level-cell end-to-end "
+                         "sections (true LevelTransition channels)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write measurement rows as JSON")
     ap.add_argument("--rows", default=DEFAULT_PATH, metavar="PATH",
@@ -127,7 +173,7 @@ if __name__ == "__main__":
     if args.json:        # fail fast on an unwritable path, not after minutes
         with open(args.json, "a"):
             pass
-    out = main(quick=args.quick)
+    out = main(quick=args.quick, mlc=args.mlc)
     for row in out:
         print(row)
     if args.json:

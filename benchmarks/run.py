@@ -18,6 +18,7 @@ BENCHES = [
     ("decoder_throughput_fig5", "benchmarks.bench_decoder_throughput"),
     ("memory_mode", "benchmarks.bench_memory_mode"),
     ("scrub_engine", "benchmarks.bench_scrub"),
+    ("kv_serving", "benchmarks.bench_kv_serving"),
     ("dse_fig7", "benchmarks.bench_dse"),
 ]
 
@@ -78,6 +79,16 @@ def main() -> None:
               f"saturated at {a['hamming_improvement']:.2f}x): NB-LDPC "
               f"improvement {a['nbldpc_improvement']:.1f}x over unprotected "
               f"(acceptance: >= 10x, pass={a['pass']})")
+    kv = all_rows.get("kv_serving", [])
+    kacc = [r for r in kv if r.get("section") == "acceptance"]
+    if kacc:
+        a = kacc[0]
+        print(f"protected KV serving [{a['code']}]: slowdown "
+              f"{a['protected_slowdown']}x vs same-driver dense, overlap "
+              f"{a['overlap_speedup']}x vs sync whole-cache decode, ppl "
+              f"delta {a['ppl_delta_protected']} protected vs "
+              f"{a['ppl_delta_unprotected']} unprotected @ raw 1e-2 "
+              f"(pass={a['pass']})")
     os.makedirs("results", exist_ok=True)
     from .rows import append_rows
     for name, rows in all_rows.items():

@@ -9,5 +9,5 @@ from .llv import init_llv, reinterpret, circular_distance
 from .pim import PIMConfig, pim_mac
 from .protected import (ProtectionConfig, ProtectedResult,
                         protected_pim_matmul, prepare_weights, strip_padding,
-                        decode_stream)
+                        decode_stream, decode_pipelined)
 from .context import PIMContext

@@ -15,6 +15,7 @@ shard width (see DESIGN.md §3), so this op introduces no collectives.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import NamedTuple, Optional
 
@@ -139,6 +140,58 @@ def protected_pim_matmul_budgeted(x: jnp.ndarray, W_enc: jnp.ndarray,
     return ProtectedResult(data, detected, uncorrected)
 
 
+def _chunk_runner(code: LDPCCode, *, n_iters: int, llv_scale: float,
+                  llv_mode: str, early_exit: bool, damping: float, cn_fbp,
+                  mesh, chunk_size: int):
+    """One jitted fixed-shape (chunk_size, n) decode executable, shard_map'd
+    over `mesh` when given. Shared by `decode_stream` / `decode_pipelined`
+    so both stream through identical cached executables."""
+    if mesh is not None:
+        mesh_size = int(np_prod_mesh(mesh))
+        if chunk_size % mesh_size != 0:
+            raise ValueError(
+                f"chunk_size={chunk_size} is not a multiple of the mesh "
+                f"size {mesh_size}; every padded chunk is shard_map'd over "
+                "the mesh, so pick a chunk_size divisible by the device "
+                "count")
+        from repro.distributed.sharding import decode_sharded
+
+        def run(yy):
+            return decode_sharded(code, yy, mesh=mesh, n_iters=n_iters,
+                                  llv_scale=llv_scale, llv_mode=llv_mode,
+                                  early_exit=early_exit, damping=damping,
+                                  cn_fbp=cn_fbp)
+    else:
+        def run(yy):
+            return decode_integers(code, yy, n_iters=n_iters,
+                                   llv_scale=llv_scale, llv_mode=llv_mode,
+                                   early_exit=early_exit, damping=damping,
+                                   cn_fbp=cn_fbp)
+
+    return jax.jit(run)
+
+
+def np_prod_mesh(mesh) -> int:
+    """Total device count of a `jax.sharding.Mesh` (its shape values)."""
+    size = 1
+    for v in mesh.shape.values():
+        size *= int(v)
+    return size
+
+
+def _pad_chunk(y, chunk_size: int):
+    """Right-pad a (b, n) chunk with all-zero words (valid codewords) to the
+    executable's fixed row count. Returns (padded, true b)."""
+    b = y.shape[0]
+    if b > chunk_size:
+        raise ValueError(f"chunk of {b} words exceeds chunk_size="
+                         f"{chunk_size}")
+    if b < chunk_size:
+        y = jnp.concatenate(
+            [y, jnp.zeros((chunk_size - b, y.shape[1]), y.dtype)], axis=0)
+    return y, b
+
+
 def decode_stream(code: LDPCCode, stream, *, chunk_size: int = 256,
                   n_iters: int = 8, llv_scale: float = 4.0,
                   llv_mode: str = "manhattan", early_exit: bool = True,
@@ -157,39 +210,77 @@ def decode_stream(code: LDPCCode, stream, *, chunk_size: int = 256,
 
     With `mesh` set (a `jax.sharding.Mesh` with a "data" axis), each padded
     chunk is additionally shard_map'd across the mesh devices via
-    `repro.distributed.sharding.decode_sharded`; `chunk_size` should then be
-    a multiple of the mesh size.
+    `repro.distributed.sharding.decode_sharded`; `chunk_size` must then be a
+    multiple of the mesh size (validated up front, at the CALL — not on
+    first consumption, and not as an opaque shard_map shape error).
     """
     if hasattr(stream, "shape"):
         arr = stream
         stream = (arr[i:i + chunk_size]
                   for i in range(0, arr.shape[0], chunk_size))
 
-    if mesh is not None:
-        from repro.distributed.sharding import decode_sharded
+    run = _chunk_runner(code, n_iters=n_iters, llv_scale=llv_scale,
+                        llv_mode=llv_mode, early_exit=early_exit,
+                        damping=damping, cn_fbp=cn_fbp, mesh=mesh,
+                        chunk_size=chunk_size)
 
-        def run(yy):
-            return decode_sharded(code, yy, mesh=mesh, n_iters=n_iters,
-                                  llv_scale=llv_scale, llv_mode=llv_mode,
-                                  early_exit=early_exit, damping=damping,
-                                  cn_fbp=cn_fbp)
-    else:
-        def run(yy):
-            return decode_integers(code, yy, n_iters=n_iters,
-                                   llv_scale=llv_scale, llv_mode=llv_mode,
-                                   early_exit=early_exit, damping=damping,
-                                   cn_fbp=cn_fbp)
+    def gen():
+        for y in stream:
+            y2, b = _pad_chunk(y, chunk_size)
+            y_corr, res = run(y2)
+            yield y_corr[:b], DecodeResult(res.symbols[:b],
+                                           res.llv_totals[:b],
+                                           res.detect_fail[:b],
+                                           res.iterations[:b])
+    return gen()
 
-    run = jax.jit(run)
-    for y in stream:
-        b = y.shape[0]
-        if b > chunk_size:
-            raise ValueError(f"chunk of {b} words exceeds chunk_size="
-                             f"{chunk_size}")
-        if b < chunk_size:
-            y = jnp.concatenate(
-                [y, jnp.zeros((chunk_size - b, y.shape[1]), y.dtype)], axis=0)
-        y_corr, res = run(y)
-        yield y_corr[:b], DecodeResult(res.symbols[:b], res.llv_totals[:b],
-                                       res.detect_fail[:b],
-                                       res.iterations[:b])
+
+def decode_pipelined(code: LDPCCode, pages, *, chunk_size: int = 256,
+                     n_iters: int = 8, llv_scale: float = 4.0,
+                     llv_mode: str = "manhattan", early_exit: bool = True,
+                     damping: float = 0.0, cn_fbp=None, mesh=None,
+                     depth: int = 1):
+    """Double-buffered paged decode: the corrected-read pipeline behind
+    `repro.memory.paged.PagedProtectedStore` serving reads.
+
+    Same contract as `decode_stream` (iterable of (b_i, n) pages, one
+    `(y_corrected, DecodeResult)` per page, single cached executable), but
+    page i+1's decode is DISPATCHED before page i's result is yielded:
+    jax dispatch is asynchronous, so while the consumer (attention, a scrub
+    writer, ...) processes page i on its own stream, the decoder is already
+    chewing on page i+1 — decode latency hides behind consumption instead
+    of serializing with it. `depth` pages are kept in flight (1 = classic
+    double buffering).
+    """
+    if depth < 1:
+        raise ValueError(f"depth must be >= 1, got {depth}")
+    if hasattr(pages, "shape"):
+        arr = pages
+        pages = (arr[i:i + chunk_size]
+                 for i in range(0, arr.shape[0], chunk_size))
+
+    run = _chunk_runner(code, n_iters=n_iters, llv_scale=llv_scale,
+                        llv_mode=llv_mode, early_exit=early_exit,
+                        damping=damping, cn_fbp=cn_fbp, mesh=mesh,
+                        chunk_size=chunk_size)
+
+    def dispatch(y):
+        y, b = _pad_chunk(y, chunk_size)
+        y_corr, res = run(y)          # async: returns immediately
+        return y_corr, res, b
+
+    def gen():
+        inflight = collections.deque()
+        for y in pages:
+            inflight.append(dispatch(y))
+            if len(inflight) > depth:
+                y_corr, res, b = inflight.popleft()
+                yield y_corr[:b], DecodeResult(
+                    res.symbols[:b], res.llv_totals[:b], res.detect_fail[:b],
+                    res.iterations[:b])
+        while inflight:
+            y_corr, res, b = inflight.popleft()
+            yield y_corr[:b], DecodeResult(
+                res.symbols[:b], res.llv_totals[:b], res.detect_fail[:b],
+                res.iterations[:b])
+    return gen()

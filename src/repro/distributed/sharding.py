@@ -173,6 +173,15 @@ def decode_sharded(code, y, *, mesh: Optional[Mesh] = None,
     return y_corr, res
 
 
+def shard_page(page, mesh: Mesh, axis_name: str = "data"):
+    """Place a (page_words, n) protected-store page row-sharded across the
+    mesh devices (the word axis is the paged analogue of the batch axis —
+    per-word independence means scan/decode over a sharded page introduces
+    no collectives). Used by `repro.memory.paged.PagedProtectedStore` so
+    device-resident pages live distributed, not replicated."""
+    return jax.device_put(page, NamedSharding(mesh, P(axis_name)))
+
+
 def scan_syndromes_sharded(code, y, *, mesh: Optional[Mesh] = None,
                            axis_name: str = "data",
                            interpret: Optional[bool] = None):

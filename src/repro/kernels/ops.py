@@ -76,6 +76,25 @@ def gf_matmul(a: jnp.ndarray, b: jnp.ndarray, p: int, *, bm: int = 128,
     return out[:M, :N]
 
 
+@functools.partial(jax.jit, static_argnames=("p", "bm", "bn", "bk",
+                                             "interpret"))
+def encode_words(u: jnp.ndarray, P: jnp.ndarray, p: int, *, bm: int = 128,
+                 bn: int = 128, bk: int = 128,
+                 interpret: bool | None = None) -> jnp.ndarray:
+    """Device-side systematic encode: (B, k) info symbols in [0, p) and the
+    code's (k, c) check generator -> (B, k + c) codewords [u | (u·P) mod p].
+
+    The check matmul runs through the Pallas `gf_matmul` MXU path (mod-p
+    fused into the last K-step), so encoding a page of words never leaves
+    the device — this is the write hot path of
+    `repro.memory.paged.PagedProtectedStore`. Bit-exact against the host
+    `repro.core.np_encode_words` (`kernels.ref.encode_words_ref` is the
+    tested oracle).
+    """
+    checks = gf_matmul(u, P, p, bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return jnp.concatenate([u.astype(jnp.int32), checks], axis=-1)
+
+
 @functools.partial(jax.jit, static_argnames=("p", "bm", "bk", "interpret"))
 def scan_syndromes(y: jnp.ndarray, ht: jnp.ndarray, p: int, *, bm: int = 128,
                    bk: int = 128,

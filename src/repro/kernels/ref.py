@@ -31,6 +31,13 @@ def scan_syndromes_ref(y: jnp.ndarray, ht: jnp.ndarray, p: int) -> jnp.ndarray:
     return (gf_matmul_ref(y, ht, p) != 0).any(axis=1)
 
 
+def encode_words_ref(u: jnp.ndarray, P: jnp.ndarray, p: int) -> jnp.ndarray:
+    """Systematic-encode oracle: [u | (u @ P) mod p], exact int32
+    accumulation. u: (B, k) info symbols in [0, p); P: (k, c)."""
+    return jnp.concatenate([u.astype(jnp.int32), gf_matmul_ref(u, P, p)],
+                           axis=-1)
+
+
 def pim_mac_ref(x: jnp.ndarray, w: jnp.ndarray, *, row_parallelism: int,
                 adc_levels: int) -> jnp.ndarray:
     """Row-grouped ADC-quantized MAC. x: (B, K), w: (K, N); K divisible by the

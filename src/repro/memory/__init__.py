@@ -8,10 +8,16 @@
 - `controller` — pluggable controller policies (basic / writeback / scrub)
                  with per-policy stats;
 - `campaign`   — the semi-analytic BER campaign engine (any scheme x any
-                 channel), producing the paper-style improvement tables.
+                 channel), producing the paper-style improvement tables;
+- `paged`      — `PagedProtectedStore`: the device-resident backend (pages
+                 as jax arrays, device encode/scan, pipelined corrected
+                 reads) serving live workloads such as protected KV caches;
+- `packing`    — the byte<->GF(p) symbolization shared by both backends.
 """
 from .array import (ProtectedMemoryArray, StoredTensor, symbolize_bytes,
                     desymbolize_bytes, digits_per_byte)
+from .paged import (PagedProtectedStore, QuantizedTensor, quantize_tensor,
+                    dequantize_tensor, words_for_tensor)
 from .channel import (Channel, LevelTransition, RetentionDrift, ReadDisturb,
                       StuckAt, Compose, PlusMinusOne, uniform_flip,
                       asymmetric_adjacent, validate_transition)
@@ -26,6 +32,8 @@ from .campaign import (ResidualProfile, NBLDPCScheme, HammingSECDEDScheme,
 __all__ = [
     "ProtectedMemoryArray", "StoredTensor", "symbolize_bytes",
     "desymbolize_bytes", "digits_per_byte",
+    "PagedProtectedStore", "QuantizedTensor", "quantize_tensor",
+    "dequantize_tensor", "words_for_tensor",
     "Channel", "LevelTransition", "RetentionDrift", "ReadDisturb", "StuckAt",
     "Compose", "PlusMinusOne", "uniform_flip", "asymmetric_adjacent",
     "validate_transition",

@@ -1,10 +1,19 @@
 """`ProtectedMemoryArray`: NB-LDPC-protected tensor storage (memory mode).
 
+This is the **host packing backend** of the protected-store stack: tensors
+live as numpy codeword arrays, encode runs on the host BLAS path, and reads
+decode synchronously under a controller policy. It is the right backend for
+checkpoints and cold storage; live serving workloads use the device-resident
+`repro.memory.paged.PagedProtectedStore`, which keeps pages as jax arrays,
+encodes on device, and streams corrected reads so decode overlaps the
+consumer.
+
 Arbitrary tensors are packed into GF(p) codewords on write — bytes are
 symbolized as base-p digits (6 trits/byte for GF(3), vs the 8 binary-valued
-trits/byte of the original checkpoint hack: 25% fewer cells) and encoded
-with the framework's own systematic code — and decoded on read through the
-vectorized `repro.core.decode` engine, under a pluggable controller policy
+trits/byte of the original checkpoint hack: 25% fewer cells; see
+`repro.memory.packing`, shared with the device backend) and encoded with the
+framework's own systematic code — and decoded on read through the vectorized
+`repro.core.decode` engine, under a pluggable controller policy
 (`repro.memory.controller`). Device faults are injected through the
 `repro.memory.channel` models, never by hand-editing stored words.
 
@@ -17,7 +26,6 @@ vectorized `repro.core.decode` engine, under a pluggable controller policy
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Dict, Optional, Union
 
 import jax
@@ -29,32 +37,10 @@ from repro.core.construction import LDPCCode
 
 from .channel import Channel
 from .controller import MemoryController, make_controller
+from .packing import digits_per_byte, symbolize_bytes, desymbolize_bytes
 
 __all__ = ["ProtectedMemoryArray", "StoredTensor", "symbolize_bytes",
            "desymbolize_bytes", "digits_per_byte"]
-
-
-def digits_per_byte(p: int) -> int:
-    """Base-p digits needed to hold one byte: ceil(log_p 256)."""
-    return math.ceil(8.0 / math.log2(p))
-
-
-def symbolize_bytes(raw: Union[bytes, np.ndarray], p: int) -> np.ndarray:
-    """bytes -> flat array of base-p digits (little-endian per byte)."""
-    b = np.frombuffer(raw, np.uint8).astype(np.int64) \
-        if not isinstance(raw, np.ndarray) else raw.astype(np.int64)
-    D = digits_per_byte(p)
-    return np.stack([(b // p ** i) % p for i in range(D)], -1).reshape(-1)
-
-
-def desymbolize_bytes(syms: np.ndarray, nbytes: int, p: int) -> bytes:
-    """Inverse of `symbolize_bytes`. Digits are clipped into the field and
-    the value into a byte, so corrupted-but-uncorrected symbols degrade to
-    wrong bytes instead of crashing."""
-    D = digits_per_byte(p)
-    d = np.clip(syms[:nbytes * D].reshape(-1, D).astype(np.int64), 0, p - 1)
-    vals = sum(d[:, i] * p ** i for i in range(D)) % 256
-    return vals.astype(np.uint8).tobytes()
 
 
 @dataclasses.dataclass

@@ -1,0 +1,67 @@
+"""Byte/tensor <-> GF(p) symbol packing shared by both protected-store
+backends.
+
+The host backend (`repro.memory.array.ProtectedMemoryArray`, numpy) and the
+device-resident backend (`repro.memory.paged.PagedProtectedStore`, jax) pack
+payloads the same way: bytes are symbolized as base-p digits — ceil(log_p 256)
+digits per byte, little-endian — and the digit stream is chunked into
+(k,)-symbol info words. Keeping one definition here means pages encoded on
+device decode bit-exactly against host-encoded checkpoints and vice versa.
+
+`symbolize_bytes`/`desymbolize_bytes` are the numpy pair (checkpoint write
+path); `symbolize_u8`/`desymbolize_u8` are the jittable jax pair the paged
+store uses to quantize live tensors into cell levels without leaving the
+device.
+"""
+from __future__ import annotations
+
+import math
+from typing import Union
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["digits_per_byte", "symbolize_bytes", "desymbolize_bytes",
+           "symbolize_u8", "desymbolize_u8"]
+
+
+def digits_per_byte(p: int) -> int:
+    """Base-p digits needed to hold one byte: ceil(log_p 256)."""
+    return math.ceil(8.0 / math.log2(p))
+
+
+def symbolize_bytes(raw: Union[bytes, np.ndarray], p: int) -> np.ndarray:
+    """bytes -> flat array of base-p digits (little-endian per byte)."""
+    b = np.frombuffer(raw, np.uint8).astype(np.int64) \
+        if not isinstance(raw, np.ndarray) else raw.astype(np.int64)
+    D = digits_per_byte(p)
+    return np.stack([(b // p ** i) % p for i in range(D)], -1).reshape(-1)
+
+
+def desymbolize_bytes(syms: np.ndarray, nbytes: int, p: int) -> bytes:
+    """Inverse of `symbolize_bytes`. Digits are clipped into the field and
+    the value into a byte, so corrupted-but-uncorrected symbols degrade to
+    wrong bytes instead of crashing."""
+    D = digits_per_byte(p)
+    d = np.clip(syms[:nbytes * D].reshape(-1, D).astype(np.int64), 0, p - 1)
+    vals = sum(d[:, i] * p ** i for i in range(D)) % 256
+    return vals.astype(np.uint8).tobytes()
+
+
+def symbolize_u8(vals: jnp.ndarray, p: int) -> jnp.ndarray:
+    """Device-side symbolization: integer byte values in [0, 256) of any
+    shape -> (..., D) base-p digits (same digit order as `symbolize_bytes`,
+    so host and device packings interoperate)."""
+    D = digits_per_byte(p)
+    v = vals.astype(jnp.int32)
+    return jnp.stack([(v // p ** i) % p for i in range(D)], axis=-1)
+
+
+def desymbolize_u8(digits: jnp.ndarray, p: int) -> jnp.ndarray:
+    """Device-side inverse: (..., D) base-p digits -> (...,) byte values in
+    [0, 256). Digits are clipped into the field first, mirroring the host
+    pair's degrade-don't-crash contract for uncorrected symbols."""
+    D = digits_per_byte(p)
+    d = jnp.clip(digits.astype(jnp.int32), 0, p - 1)
+    val = sum(d[..., i] * p ** i for i in range(D))
+    return val % 256

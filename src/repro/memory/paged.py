@@ -1,0 +1,439 @@
+"""`PagedProtectedStore`: the device-resident protected-store backend.
+
+Where `repro.memory.array.ProtectedMemoryArray` (the host packing backend)
+holds numpy codewords and decodes whole tensors synchronously — right for
+checkpoints — this backend keeps storage as fixed-shape **(page_words, n)
+GF-level pages living as jax arrays**, so protection can sit under live
+workloads:
+
+- **encode on device** — appended info words run through
+  `repro.kernels.ops.encode_words` (the Pallas `gf_matmul` MXU path with the
+  mod-p fused epilogue); one cached (page_words, k) executable serves every
+  append, and pages never round-trip through the host;
+- **scan on device** — per-page syndrome flagging via the fused
+  `scan_syndromes` kernel (only the (page_words,) mask leaves the device);
+- **streaming corrected reads** — `iter_corrected()` walks the pages through
+  `repro.core.protected.decode_pipelined`: page *i+1*'s decode is dispatched
+  before page *i* is yielded, so decode latency hides behind the consumer
+  (attention, in the protected KV-serving path). Clean pages (no flags) skip
+  the decoder entirely.
+
+With `mesh` set, pages are shard_map'd across the local devices row-wise
+(`decode_sharded` / `scan_syndromes_sharded`), alongside the batch axis the
+rest of the stack already shards.
+
+`quantize_tensor` / `dequantize_tensor` are the jittable float<->GF bridges
+used by the protected KV cache (`repro.models.kv`): absmax int8 quantization,
+then base-p symbolization (`repro.memory.packing`, shared with the host
+backend so device pages and host checkpoints interoperate bit-exactly).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterator, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import get_code
+from repro.core.construction import LDPCCode
+from repro.core.decode import decode_integers
+from repro.core.protected import decode_pipelined, np_prod_mesh
+
+from .channel import Channel
+from .packing import digits_per_byte, symbolize_u8, desymbolize_u8
+
+__all__ = ["PagedProtectedStore", "QuantizedTensor", "quantize_tensor",
+           "dequantize_tensor", "words_for_tensor"]
+
+
+# ---------------------------------------------------------------------------
+# float tensor <-> info words (jittable; the KV-cache quantization bridge)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizedTensor:
+    """Metadata needed to reassemble a tensor from its info words."""
+
+    shape: tuple
+    dtype: str
+    scale: jnp.ndarray          # () float32 absmax scale
+    n_words: int                # info words the tensor occupies
+
+
+def words_for_tensor(shape, p: int, k: int) -> int:
+    """Info words an int8-quantized tensor of `shape` packs into."""
+    numel = int(np.prod(shape)) if shape else 1
+    return math.ceil(numel * digits_per_byte(p) / k) if numel else 0
+
+
+def quantize_tensor(x: jnp.ndarray, p: int, k: int
+                    ) -> Tuple[jnp.ndarray, QuantizedTensor]:
+    """absmax-int8 quantize + symbolize + pack: float tensor -> ((m, k) info
+    words in [0, p), QuantizedTensor meta). Pure jnp (a handful of
+    elementwise dispatches — the encode/decode executables dominate the
+    page path). Padding digits are zero (they decode to bytes that are
+    sliced off)."""
+    shape, dtype = tuple(x.shape), str(x.dtype)
+    xf = x.astype(jnp.float32).reshape(-1)
+    absmax = jnp.max(jnp.abs(xf)) if xf.size else jnp.float32(0)
+    scale = jnp.maximum(absmax, 1e-30) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int32)
+    u8 = q + 128                                   # [1, 255] byte values
+    digits = symbolize_u8(u8, p).reshape(-1)       # (numel * D,)
+    k = int(k)
+    m = words_for_tensor(shape, p, k)
+    pad = m * k - digits.shape[0]
+    if pad:
+        digits = jnp.concatenate([digits, jnp.zeros(pad, digits.dtype)])
+    return digits.reshape(m, k), QuantizedTensor(shape, dtype, scale, m)
+
+
+def dequantize_tensor(words: jnp.ndarray, meta: QuantizedTensor,
+                      p: int) -> jnp.ndarray:
+    """Inverse bridge: (m, k) decoded info words -> tensor of `meta.shape`.
+    Corrupted-but-uncorrected symbols degrade to wrong values, never
+    crashes (digits are clipped into the field)."""
+    numel = int(np.prod(meta.shape)) if meta.shape else 1
+    D = digits_per_byte(p)
+    digits = words.reshape(-1)[:numel * D].reshape(numel, D)
+    u8 = desymbolize_u8(digits, p)
+    q = u8.astype(jnp.float32) - 128.0
+    out = (q * meta.scale).astype(meta.dtype)
+    return out.reshape(meta.shape)
+
+
+# ---------------------------------------------------------------------------
+# the device-resident paged store
+# ---------------------------------------------------------------------------
+
+
+class PagedProtectedStore:
+    """Fixed-shape (page_words, n) GF-level pages as jax arrays, with device
+    encode, per-page syndrome flagging, and pipelined corrected reads."""
+
+    def __init__(self, code: Union[str, LDPCCode] = "wl1024_r08", *,
+                 page_words: int = 256, mesh=None, n_iters: int = 10,
+                 damping: float = 0.3, llv_scale: float = 4.0,
+                 llv_mode: str = "manhattan", key: int = 0,
+                 backend: str = "auto"):
+        if backend not in ("auto", "kernel", "ref"):
+            raise ValueError(f"backend {backend!r} not in "
+                             "('auto', 'kernel', 'ref')")
+        self.code = get_code(code) if isinstance(code, str) else code
+        # like MemoryController.scan_backend: the Pallas kernels compile
+        # natively only on TPU; everywhere else interpret-mode is a
+        # correctness path, so "auto" routes encode/scan to the jitted jnp
+        # oracles there (bit-identical by the kernel parity tests)
+        self.backend = backend
+        if page_words <= 0:
+            raise ValueError(f"page_words must be positive, got {page_words}")
+        if mesh is not None:
+            mesh_size = np_prod_mesh(mesh)
+            if page_words % mesh_size != 0:
+                raise ValueError(
+                    f"page_words={page_words} is not a multiple of the mesh "
+                    f"size {mesh_size}; pages are shard_map'd row-wise, so "
+                    "pick a page size divisible by the device count")
+        self.page_words = page_words
+        self.mesh = mesh
+        self.n_iters = n_iters
+        self.damping = damping
+        self.llv_scale = llv_scale
+        self.llv_mode = llv_mode
+        self._pages: list = []            # [(page_words, n) int32 jax arrays]
+        self._new_page = lambda: jnp.zeros((page_words, self.code.n),
+                                           jnp.int32)
+        if mesh is not None:
+            from repro.distributed.sharding import shard_page
+            base = self._new_page
+            self._new_page = lambda: shard_page(base(), mesh)
+        self._n_words = 0                 # valid words across pages
+        self._key = jax.random.PRNGKey(key)
+        self._injections = 0
+        self._encode_fn = None
+        self._scan_fn = None
+        self._decode_fn = None
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def n_words(self) -> int:
+        return self._n_words
+
+    @property
+    def n_pages(self) -> int:
+        return len(self._pages)
+
+    @property
+    def n_cells(self) -> int:
+        return self._n_words * self.code.n
+
+    def page(self, i: int) -> jnp.ndarray:
+        return self._pages[i]
+
+    # -- cached executables -------------------------------------------------
+
+    def _use_kernels(self) -> bool:
+        if self.backend == "auto":
+            return jax.default_backend() == "tpu"
+        return self.backend == "kernel"
+
+    def _encoder(self):
+        """One cached (page_words, k) device-encode executable: the Pallas
+        `encode_words` MXU path on TPU, its jitted jnp oracle elsewhere."""
+        if self._encode_fn is None:
+            P = jnp.asarray(self.code.P, jnp.int32)
+            p = self.code.p
+            if self._use_kernels():
+                from repro.kernels.ops import encode_words
+                fn = encode_words
+            else:
+                from repro.kernels.ref import encode_words_ref
+                fn = encode_words_ref
+            self._encode_fn = jax.jit(lambda u: fn(u, P, p))
+        return self._encode_fn
+
+    def _scanner(self):
+        """One cached (page_words, n) syndrome-scan executable (fused Pallas
+        kernel on TPU, jnp oracle elsewhere; sharded over `mesh` when
+        given)."""
+        if self._scan_fn is None:
+            if self.mesh is not None:
+                from repro.distributed.sharding import scan_syndromes_sharded
+                code, mesh = self.code, self.mesh
+                self._scan_fn = jax.jit(
+                    lambda y: scan_syndromes_sharded(code, y, mesh=mesh))
+            else:
+                ht = jnp.asarray(self.code.H.T, jnp.int32)
+                p = self.code.p
+                if self._use_kernels():
+                    from repro.kernels.ops import scan_syndromes
+                    fn = scan_syndromes
+                else:
+                    from repro.kernels.ref import scan_syndromes_ref
+                    fn = scan_syndromes_ref
+                self._scan_fn = jax.jit(lambda y: fn(y, ht, p))
+        return self._scan_fn
+
+    def _decoder(self):
+        """One cached (page_words, n) decode executable (sharded over
+        `mesh` when given)."""
+        if self._decode_fn is None:
+            code = self.code
+            kw = dict(n_iters=self.n_iters, damping=self.damping,
+                      llv_scale=self.llv_scale, llv_mode=self.llv_mode,
+                      early_exit=True)
+            if self.mesh is not None:
+                from repro.distributed.sharding import decode_sharded
+                mesh = self.mesh
+                self._decode_fn = jax.jit(
+                    lambda y: decode_sharded(code, y, mesh=mesh, **kw))
+            else:
+                self._decode_fn = jax.jit(
+                    lambda y: decode_integers(code, y, **kw))
+        return self._decode_fn
+
+    # -- write path ---------------------------------------------------------
+
+    def _encode_rows(self, u: jnp.ndarray) -> jnp.ndarray:
+        """Encode (b, k) info rows through the fixed-shape executable."""
+        b = u.shape[0]
+        if b < self.page_words:
+            u = jnp.concatenate(
+                [u, jnp.zeros((self.page_words - b, u.shape[1]), u.dtype)])
+        return self._encoder()(u.astype(jnp.int32))[:b]
+
+    def append_words(self, u) -> Tuple[int, int]:
+        """Append (m, k) info words (field symbols in [0, p)): encode on
+        device and pack into pages. Returns the occupied word range
+        [start, start + m). A partially-filled trailing page is padded with
+        all-zero words (valid codewords — scan-neutral) and topped up by the
+        next append."""
+        u = jnp.asarray(u)
+        if u.ndim != 2 or u.shape[1] != self.code.k:
+            raise ValueError(f"expected (m, {self.code.k}) info words, got "
+                             f"{tuple(u.shape)}")
+        m = u.shape[0]
+        start = self._n_words
+        pw, n = self.page_words, self.code.n
+        done = 0
+        while done < m:
+            slot = self._n_words % pw
+            if slot == 0:
+                self._pages.append(self._new_page())
+            take = min(m - done, pw - slot)
+            enc = self._encode_rows(u[done:done + take])
+            page = self._pages[-1]
+            self._pages[-1] = jax.lax.dynamic_update_slice(
+                page, enc, (slot, 0))
+            done += take
+            self._n_words += take
+        return start, start + m
+
+    def append_encoded(self, enc) -> Tuple[int, int]:
+        """Adopt already-encoded (m, n) codewords (e.g. host-encoded
+        checkpoint pages from `ProtectedMemoryArray.stored`) without
+        re-encoding — the backend-interop path."""
+        enc = jnp.asarray(enc, jnp.int32)
+        if enc.ndim != 2 or enc.shape[1] != self.code.n:
+            raise ValueError(f"expected (m, {self.code.n}) codewords, got "
+                             f"{tuple(enc.shape)}")
+        m = enc.shape[0]
+        start = self._n_words
+        pw = self.page_words
+        done = 0
+        while done < m:
+            slot = self._n_words % pw
+            if slot == 0:
+                self._pages.append(self._new_page())
+            take = min(m - done, pw - slot)
+            self._pages[-1] = jax.lax.dynamic_update_slice(
+                self._pages[-1], enc[done:done + take], (slot, 0))
+            done += take
+            self._n_words += take
+        return start, start + m
+
+    def export_words(self) -> np.ndarray:
+        """All valid stored codewords as one host (n_words, n) int8 array
+        (checkpoint hand-off to the host backend)."""
+        if not self._pages:
+            return np.zeros((0, self.code.n), np.int8)
+        flat = np.concatenate([np.asarray(pg) for pg in self._pages])
+        return flat[:self._n_words].astype(np.int8)
+
+    # -- fault injection ----------------------------------------------------
+
+    def inject(self, channel: Channel,
+               key: Union[int, jax.Array, None] = None, *, t: float = 0.0,
+               n_reads: int = 0) -> int:
+        """Corrupt the stored pages in place through a level-domain channel
+        model (device-side). Returns the number of cells changed. Pad rows
+        of the trailing page are corrupted too — they are storage like any
+        other row, and the scan/decode path treats their errors normally."""
+        if channel.domain != "level":
+            raise ValueError(f"{type(channel).__name__} is an integer-domain "
+                             "channel; stored cells need a level-domain one")
+        if channel.p != self.code.p:
+            raise ValueError(f"channel alphabet {channel.p} != "
+                             f"GF({self.code.p})")
+        if key is None:
+            key = jax.random.fold_in(self._key, self._injections)
+        elif isinstance(key, int):
+            key = jax.random.PRNGKey(key)
+        self._injections += 1
+        changed = 0
+        for i, page in enumerate(self._pages):
+            k = jax.random.fold_in(key, i)
+            new = channel.apply(k, page, t=t, n_reads=n_reads)
+            new = new.astype(jnp.int32)
+            changed += int(jnp.sum(new != page))
+            self._pages[i] = new
+        return changed
+
+    # -- read path ----------------------------------------------------------
+
+    def scan_flags(self) -> np.ndarray:
+        """(n_words,) bool — per-word nonzero-syndrome flags via the fused
+        device scan, streamed page by page through one executable."""
+        if not self._pages:
+            return np.zeros(0, bool)
+        fn = self._scanner()
+        flags = np.concatenate([np.asarray(fn(pg)) for pg in self._pages])
+        return flags[:self._n_words]
+
+    def iter_corrected(self, *, scan_first: bool = True,
+                       depth: int = 1) -> Iterator[jnp.ndarray]:
+        """Yield (page_words, n) corrected symbol pages in storage order,
+        double-buffered: page i+1's scan/decode is dispatched before page i
+        is yielded, so decode overlaps the consumer. With `scan_first`,
+        clean pages bypass the decoder entirely (the serving fast path:
+        scan is one fused matmul; FBP runs only where the scan flags)."""
+        if depth < 1:
+            raise ValueError(f"depth must be >= 1, got {depth}")
+        scan = self._scanner() if scan_first else None
+        decode = self._decoder()
+
+        def dispatch(page):
+            if scan is not None and not bool(np.asarray(scan(page)).any()):
+                return page                       # clean: levels ARE symbols
+            _y, res = decode(page)                # async dispatch
+            return res.symbols
+
+        pending = []
+        for page in self._pages:
+            pending.append(dispatch(page))
+            if len(pending) > depth:
+                yield pending.pop(0)
+        yield from pending
+
+    def read_corrected(self) -> jnp.ndarray:
+        """Synchronous whole-store corrected read: every page decoded and
+        stacked to (n_words, n) symbols. The baseline the pipelined read is
+        benchmarked against."""
+        if not self._pages:
+            return jnp.zeros((0, self.code.n), jnp.int32)
+        decode = self._decoder()
+        outs = [decode(pg)[1].symbols for pg in self._pages]
+        return jnp.concatenate(outs)[:self._n_words]
+
+    def read_words(self, start: int, stop: int, *,
+                   corrected: bool = True) -> jnp.ndarray:
+        """Gather stored words [start, stop) across pages (corrected via the
+        per-page scan+decode route, or raw levels)."""
+        if not 0 <= start <= stop <= self._n_words:
+            raise ValueError(f"word range [{start}, {stop}) outside "
+                             f"[0, {self._n_words})")
+        if start == stop:
+            return jnp.zeros((0, self.code.n), jnp.int32)
+        pw = self.page_words
+        out = []
+        for pi in range(start // pw, (stop - 1) // pw + 1):
+            page = self._pages[pi]
+            if corrected:
+                scan = self._scanner()
+                if bool(np.asarray(scan(page)).any()):
+                    page = self._decoder()(page)[1].symbols
+            lo = max(start - pi * pw, 0)
+            hi = min(stop - pi * pw, pw)
+            out.append(page[lo:hi])
+        return jnp.concatenate(out)
+
+    def read_info(self, start: int, stop: int, *,
+                  corrected: bool = True) -> jnp.ndarray:
+        """Like `read_words` but sliced to the (m, k) info symbols — the
+        shape `dequantize_tensor` consumes."""
+        return self.read_words(start, stop, corrected=corrected)[:, :self.code.k]
+
+    def decode_stream(self, **kw) -> Iterator:
+        """The raw `(y_corrected, DecodeResult)` pipeline over the stored
+        pages (see `repro.core.protected.decode_pipelined`) for consumers
+        that need decode metadata (detect_fail, iterations) per page."""
+        kw.setdefault("chunk_size", self.page_words)
+        kw.setdefault("n_iters", self.n_iters)
+        kw.setdefault("damping", self.damping)
+        kw.setdefault("llv_scale", self.llv_scale)
+        kw.setdefault("llv_mode", self.llv_mode)
+        kw.setdefault("mesh", self.mesh)
+        return decode_pipelined(self.code, iter(self._pages), **kw)
+
+    def scrub(self) -> dict:
+        """Sweep the pages: scan, decode flagged pages, write repairs back
+        (device-side). Returns {pages, flagged_words, repaired_words}."""
+        scan, decode = self._scanner(), self._decoder()
+        flagged_words = repaired = 0
+        for i, page in enumerate(self._pages):
+            flags = scan(page)
+            nf = int(jnp.sum(flags))
+            if not nf:
+                continue
+            flagged_words += nf
+            _y, res = decode(page)
+            good = flags & ~res.detect_fail
+            self._pages[i] = jnp.where(good[:, None], res.symbols, page)
+            repaired += int(jnp.sum(good))
+        return {"pages": len(self._pages), "flagged_words": flagged_words,
+                "repaired_words": repaired}

@@ -2,3 +2,4 @@
 from .lm import (init_params, param_axes, forward, loss_fn, init_caches,
                  cache_axes, decode_step, prefill, encode_params_for_pim,
                  pim_param_axes)
+from .kv import ProtectedKVConfig, ProtectedKVLayer, ProtectedKVCaches

@@ -1,0 +1,317 @@
+"""Protected KV-cache serving: NB-LDPC memory-mode protection under live
+inference (the ROADMAP "Protected KV-cache serving" scenario).
+
+Self-attention K/V pages live in a device-resident
+`repro.memory.paged.PagedProtectedStore` instead of raw jnp buffers:
+
+- **append** — tokens accumulate in a small dense *hot page*
+  (`page_tokens` slots); when it fills, the page is absmax-int8 quantized,
+  symbolized to GF(p) levels and device-encoded into the store (one
+  fixed-shape encode executable per layer — write-time encode, the paper's
+  no-interruption property);
+- **read** — attention consumes pages through a streaming online-softmax
+  (`repro.nn.layers._attend_paged`); frozen pages decode through the
+  overlap pipeline (`PagedProtectedStore.iter_corrected`: page *i+1*'s
+  scan/decode dispatched while page *i* is consumed) and the dequantized
+  views are memoized until storage is corrupted (`inject`) — the decoder
+  sits under the read cache, off the per-token hot path;
+- **quality ablation** — `corrected=False` reads raw (possibly corrupted)
+  levels, the unprotected baseline the serving benchmark compares against;
+  `overlap=False` blocks on every page (synchronous whole-cache decode),
+  the no-pipelining ablation.
+
+Layer coverage: global self-attention layers ("attn", non-cross, no sliding
+window) are protected; mamba states, cross-attention K/V and sliding-window
+rings keep their dense caches (ring eviction under paged ECC is future
+work). `repro.models.lm.init_caches(..., protected_kv=...)` builds the
+manager, `prefill` ingests the prompt K/V, and `decode_step` serves through
+it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.memory.paged import (PagedProtectedStore, dequantize_tensor,
+                                quantize_tensor, words_for_tensor)
+
+__all__ = ["ProtectedKVConfig", "ProtectedKVLayer", "ProtectedKVCaches"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ProtectedKVConfig:
+    """Knobs for the protected KV serving path."""
+
+    code_name: str = "wl160_r08"
+    page_tokens: int = 16          # tokens per frozen (encoded) page
+    n_iters: int = 8               # FBP iterations on flagged pages
+    damping: float = 0.3
+    corrected: bool = True         # False: raw-level reads (unprotected
+                                   # quality ablation — same quantization,
+                                   # no correction)
+    overlap: bool = True           # False: block on every page decode
+                                   # (synchronous whole-cache ablation)
+    mesh: Any = None               # shard pages across a local device mesh
+
+
+class ProtectedKVLayer:
+    """One self-attention layer's protected K/V: two paged stores (K and V),
+    a dense hot page, and a memoized decoded view."""
+
+    def __init__(self, pkv: ProtectedKVConfig, batch: int, hkv: int,
+                 dh: int, dtype=jnp.bfloat16):
+        self.pkv = pkv
+        self.batch, self.hkv, self.dh = batch, hkv, dh
+        self.dtype = dtype
+        self.page_shape = (batch, pkv.page_tokens, hkv, dh)
+        store_kw = dict(n_iters=pkv.n_iters, damping=pkv.damping,
+                        mesh=pkv.mesh)
+        from repro.core import get_code
+        code = get_code(pkv.code_name)
+        # one frozen KV page == exactly one store page, so the store's
+        # pipelined page iterator IS the layer's page iterator
+        wpu = words_for_tensor(self.page_shape, code.p, code.k)
+        self.k_store = PagedProtectedStore(code, page_words=wpu, **store_kw)
+        self.v_store = PagedProtectedStore(code, page_words=wpu, **store_kw)
+        self.words_per_page = wpu
+        self.hot_k = jnp.zeros(self.page_shape, dtype)
+        self.hot_v = jnp.zeros(self.page_shape, dtype)
+        self.hot_len = 0
+        self.n_frozen = 0              # frozen tokens (== pages * page_tokens)
+        self._metas: list = []         # per frozen page: (k_meta, v_meta)
+        self._decoded: Optional[list] = None   # memoized [(k_pg, v_pg)]
+
+    # -- write path ---------------------------------------------------------
+
+    @property
+    def n_tokens(self) -> int:
+        return self.n_frozen + self.hot_len
+
+    def append(self, k: jnp.ndarray, v: jnp.ndarray) -> None:
+        """Append (B, t, Hkv, D) new-token K/V (RoPE already applied, like
+        the dense cache path). Fills the hot page; every time it reaches
+        `page_tokens` tokens the page is quantized + device-encoded into
+        the stores."""
+        t = k.shape[1]
+        done = 0
+        while done < t:
+            take = min(t - done, self.pkv.page_tokens - self.hot_len)
+            self.hot_k = jax.lax.dynamic_update_slice_in_dim(
+                self.hot_k, k[:, done:done + take].astype(self.dtype),
+                self.hot_len, axis=1)
+            self.hot_v = jax.lax.dynamic_update_slice_in_dim(
+                self.hot_v, v[:, done:done + take].astype(self.dtype),
+                self.hot_len, axis=1)
+            self.hot_len += take
+            done += take
+            if self.hot_len == self.pkv.page_tokens:
+                self._freeze()
+
+    def _freeze(self) -> None:
+        code = self.k_store.code
+        kw, kmeta = quantize_tensor(self.hot_k, code.p, code.k)
+        vw, vmeta = quantize_tensor(self.hot_v, code.p, code.k)
+        self.k_store.append_words(kw)
+        self.v_store.append_words(vw)
+        self._metas.append((kmeta, vmeta))
+        if self._decoded is not None:
+            # write-through: storage was just written clean, so the decoded
+            # view of this page is the dequantized pre-encode words
+            self._decoded.append((dequantize_tensor(kw, kmeta, code.p),
+                                  dequantize_tensor(vw, vmeta, code.p)))
+        self.n_frozen += self.pkv.page_tokens
+        self.hot_len = 0
+
+    # -- read path ----------------------------------------------------------
+
+    def invalidate(self) -> None:
+        """Drop the memoized decoded view (storage changed under it)."""
+        self._decoded = None
+
+    def inject(self, channel, key=None, **kw) -> int:
+        """Corrupt both stores through a channel model; invalidates the
+        decoded view so the next read goes through the decoder."""
+        changed = self.k_store.inject(channel, key, **kw)
+        changed += self.v_store.inject(channel, key, **kw)
+        self.invalidate()
+        return changed
+
+    def _refill_iter(self):
+        """Decode + dequantize the frozen pages, one at a time.
+
+        Overlap mode streams both stores through the double-buffered
+        pipeline (`PagedProtectedStore.iter_corrected`: scan-gated decode of
+        page i+1 dispatched while page i's consumer runs) and never blocks —
+        the attention updates interleave with the decode queue. Sync mode
+        (the whole-cache-decode ablation) decodes every page unconditionally
+        and blocks on each before moving on. corrected=False reads raw
+        levels (the unprotected-quality ablation)."""
+        p = self.k_store.code.p
+        kcode = self.k_store.code.k
+        if not self.pkv.corrected:
+            pages = zip(self.k_store._pages, self.v_store._pages)
+        elif self.pkv.overlap:
+            pages = zip(self.k_store.iter_corrected(depth=1),
+                        self.v_store.iter_corrected(depth=1))
+        else:
+            def sync_pages():
+                for i in range(self.k_store.n_pages):
+                    kp = self.k_store._decoder()(self.k_store.page(i))[1]
+                    vp = self.v_store._decoder()(self.v_store.page(i))[1]
+                    yield (jax.block_until_ready(kp.symbols),
+                           jax.block_until_ready(vp.symbols))
+            pages = sync_pages()
+        for (kpg, vpg), (kmeta, vmeta) in zip(pages, self._metas):
+            kd = dequantize_tensor(kpg[:, :kcode], kmeta, p)
+            vd = dequantize_tensor(vpg[:, :kcode], vmeta, p)
+            if not self.pkv.overlap:
+                kd = jax.block_until_ready(kd)
+                vd = jax.block_until_ready(vd)
+            yield kd, vd
+
+    def pages(self):
+        """Yield (k_page (B, T, Hkv, D), v_page, valid_tokens) in order —
+        the iterator `repro.nn.layers._attend_paged` consumes. Frozen pages
+        come from the memoized decoded view; when storage was corrupted
+        (`inject`) the refill STREAMS through the decode pipeline directly
+        into the consumer, memoizing as it goes, so ECC decode overlaps
+        attention instead of preceding it. The hot page rides last."""
+        T = self.pkv.page_tokens
+        if self._decoded is not None:
+            yield from ((kd, vd, T) for kd, vd in self._decoded)
+        else:
+            acc = []
+            for kd, vd in self._refill_iter():
+                acc.append((kd, vd))
+                yield kd, vd, T
+            self._decoded = acc          # only on full consumption
+        if self.hot_len:
+            yield self.hot_k, self.hot_v, self.hot_len
+
+    # -- stats --------------------------------------------------------------
+
+    def stats(self) -> dict:
+        return {"tokens": self.n_tokens, "frozen_pages": len(self._metas),
+                "stored_words": self.k_store.n_words + self.v_store.n_words,
+                "stored_cells": self.k_store.n_cells + self.v_store.n_cells,
+                "flagged_words": int(self.k_store.scan_flags().sum()
+                                     + self.v_store.scan_flags().sum())}
+
+
+class ProtectedKVCaches:
+    """Whole-model protected decode caches: `ProtectedKVLayer` per global
+    self-attention layer, dense dicts for everything else (mamba state,
+    cross K/V, sliding-window rings). The pytree-shaped `view`/`update`
+    surface is what `repro.models.lm._apply_block` consumes, so the block
+    code is identical for protected and dense serving."""
+
+    def __init__(self, cfg: ArchConfig, pkv: ProtectedKVConfig, batch: int,
+                 max_seq: int):
+        from .lm import _block_cache                     # lazy: avoid cycle
+        self.cfg, self.pkv = cfg, pkv
+        self.batch, self.max_seq = batch, max_seq
+        n_aux = cfg.n_aux_tokens or 1
+        self.layers: Dict[Tuple[int, int], ProtectedKVLayer] = {}
+        self.dense: Dict[Tuple[int, int], dict] = {}
+        for g in range(cfg.n_groups):
+            for i, spec in enumerate(cfg.group_spec):
+                if self._protectable(spec):
+                    self.layers[(g, i)] = ProtectedKVLayer(
+                        pkv, batch, cfg.n_kv_heads, cfg.head_dim)
+                else:
+                    self.dense[(g, i)] = _block_cache(spec, cfg, batch,
+                                                      max_seq, n_aux)
+
+    @staticmethod
+    def _protectable(spec) -> bool:
+        return (spec.kind == "attn" and not spec.cross
+                and not spec.local_window)
+
+    # -- the _apply_block surface -------------------------------------------
+
+    def view(self, g: int, i: int) -> dict:
+        if (g, i) in self.layers:
+            return {"paged": self.layers[(g, i)]}
+        return self.dense[(g, i)]
+
+    def update(self, g: int, i: int, new_cache: Optional[dict]) -> None:
+        if not new_cache or (g, i) in self.layers:
+            return
+        self.dense[(g, i)].update(new_cache)
+
+    # -- prefill ingest -----------------------------------------------------
+
+    def ingest_prefill(self, caches, S: int) -> None:
+        """Adopt the stacked cache pytree a `prefill` pass produced: the
+        prompt K/V of protected layers is appended (quantize + device
+        encode, page by page); dense entries are re-homed into their
+        max-seq buffers."""
+        for i, spec in enumerate(self.cfg.group_spec):
+            entry = caches[f"pos{i}"]
+            for g in range(self.cfg.n_groups):
+                sliced = jax.tree.map(lambda t: t[g], entry)
+                if (g, i) in self.layers:
+                    self.layers[(g, i)].append(sliced["k"][:, :S],
+                                               sliced["v"][:, :S])
+                else:
+                    dst = self.dense[(g, i)]
+                    for name, val in sliced.items():
+                        buf = dst[name]
+                        if buf.shape == val.shape:
+                            dst[name] = val
+                        else:
+                            pad = [(0, d - s) for d, s in
+                                   zip(buf.shape, val.shape)]
+                            dst[name] = jnp.pad(val, pad)
+
+    # -- maintenance / stats ------------------------------------------------
+
+    def inject(self, channel, key: int = 0, **kw) -> int:
+        """Corrupt every protected layer's stores (distinct subkeys) and
+        invalidate their decoded views."""
+        base = jax.random.PRNGKey(key) if isinstance(key, int) else key
+        changed = 0
+        for j, layer in enumerate(sorted(self.layers)):
+            changed += self.layers[layer].inject(
+                channel, jax.random.fold_in(base, j), **kw)
+        return changed
+
+    def invalidate(self) -> None:
+        for layer in self.layers.values():
+            layer.invalidate()
+
+    def scrub(self) -> dict:
+        rep = {"flagged_words": 0, "repaired_words": 0}
+        for layer in self.layers.values():
+            for store in (layer.k_store, layer.v_store):
+                r = store.scrub()
+                rep["flagged_words"] += r["flagged_words"]
+                rep["repaired_words"] += r["repaired_words"]
+            layer.invalidate()
+        return rep
+
+    def stats(self) -> dict:
+        per = [ly.stats() for ly in self.layers.values()]
+        return {"protected_layers": len(self.layers),
+                "dense_layers": len(self.dense),
+                "tokens": per[0]["tokens"] if per else 0,
+                "stored_words": sum(s["stored_words"] for s in per),
+                "stored_cells": sum(s["stored_cells"] for s in per),
+                "flagged_words": sum(s["flagged_words"] for s in per)}
+
+
+def protected_overhead(cfg: ArchConfig, pkv: ProtectedKVConfig) -> dict:
+    """Static storage accounting: cells per token for the protected vs raw
+    dense cache (rate loss = check overhead x symbolization density)."""
+    from repro.core import get_code
+    from repro.memory.packing import digits_per_byte
+    code = get_code(pkv.code_name)
+    bytes_per_tok = 2 * cfg.n_kv_heads * cfg.head_dim          # int8 K + V
+    digits = bytes_per_tok * digits_per_byte(code.p)
+    return {"code": pkv.code_name, "rate": code.k / code.n,
+            "cells_per_token": digits / code.rate,
+            "int8_bytes_per_token": bytes_per_tok}

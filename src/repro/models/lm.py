@@ -226,8 +226,12 @@ def _apply_block(bp, x, spec: LayerSpec, cfg: ArchConfig, *, positions,
             if cache is not None:
                 new_cache["ck"], new_cache["cv"] = aux_kv
         else:
-            kv = ({"k": cache["k"], "v": cache["v"]}
-                  if cache is not None else None)
+            kv = None
+            if cache is not None:
+                # a {"paged": ProtectedKVLayer} cache routes the layer
+                # through the protected paged-store read path
+                kv = (cache if "paged" in cache
+                      else {"k": cache["k"], "v": cache["v"]})
             y, nc = L.attention_apply(bp["attn"], h, spec, cfg,
                                       positions=positions, kv_cache=kv,
                                       cache_pos=cache_pos, pim_ctx=pim_ctx)
@@ -370,8 +374,21 @@ def _block_cache(spec: LayerSpec, cfg: ArchConfig, batch: int, max_seq: int,
     return c
 
 
-def init_caches(cfg: ArchConfig, batch: int, max_seq: int):
-    """Stacked (over n_groups) cache pytree for decoding."""
+def init_caches(cfg: ArchConfig, batch: int, max_seq: int, *,
+                protected_kv=None):
+    """Stacked (over n_groups) cache pytree for decoding.
+
+    With `protected_kv` (a `repro.models.kv.ProtectedKVConfig`), returns a
+    `ProtectedKVCaches` manager instead: global self-attention K/V lives in
+    device-resident NB-LDPC-protected paged stores (quantize + encode on
+    append, decode-overlapped reads), everything else stays dense. Serve it
+    through the same `prefill`/`decode_step` entry points (the decode group
+    loop runs unrolled in Python for that path — the paged stores are host
+    objects, not scan carries).
+    """
+    if protected_kv is not None:
+        from .kv import ProtectedKVCaches
+        return ProtectedKVCaches(cfg, protected_kv, batch, max_seq)
     n_aux = cfg.n_aux_tokens or 1
 
     def rep(tree):
@@ -400,12 +417,49 @@ def cache_axes(cfg: ArchConfig):
     return {f"pos{i}": ax_block(spec) for i, spec in enumerate(cfg.group_spec)}
 
 
+def _head_logits(params, cfg: ArchConfig, x):
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = (x @ head.astype(CDT)).astype(jnp.float32)
+    if cfg.softcap_final:
+        logits = cfg.softcap_final * jnp.tanh(logits / cfg.softcap_final)
+    return constrain(logits, "batch", None, "vocab")
+
+
+def _decode_step_protected(params, cfg: ArchConfig, caches, token, pos, *,
+                           aux=None, pim_ctx=None):
+    """One-token decode against `ProtectedKVCaches`: the group stack runs
+    unrolled in Python (paged stores are host-managed objects, not scan
+    carries); each protected attention layer appends the token's K/V into
+    its paged store and reads through the overlap-decode pipeline. Dense
+    entries (mamba / cross / sliding-window) update in the manager."""
+    B = token.shape[0]
+    x = jnp.take(params["embed"], token, axis=0).astype(CDT)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, CDT)
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    for g in range(cfg.n_groups):
+        gp = jax.tree.map(lambda t: t[g], params["groups"])
+        for i, spec in enumerate(cfg.group_spec):
+            x, nc = _apply_block(gp[f"pos{i}"], x, spec, cfg,
+                                 positions=positions, aux=aux,
+                                 cache=caches.view(g, i), cache_pos=pos,
+                                 pim_ctx=pim_ctx)
+            caches.update(g, i, nc)
+    return _head_logits(params, cfg, x), caches
+
+
 def decode_step(params, cfg: ArchConfig, caches, token, pos, *, aux=None,
                 pim_ctx=None):
     """One-token decode. token: (B, 1) int32; pos: () int32 current position.
     caches: stacked pytree from init_caches (cross entries must be filled by
-    prefill, or `aux` provided to compute them on the fly).
+    prefill, or `aux` provided to compute them on the fly), or the
+    `ProtectedKVCaches` manager from `init_caches(..., protected_kv=...)`.
     Returns (logits (B, 1, V), new_caches)."""
+    from .kv import ProtectedKVCaches
+    if isinstance(caches, ProtectedKVCaches):
+        return _decode_step_protected(params, cfg, caches, token, pos,
+                                      aux=aux, pim_ctx=pim_ctx)
     B = token.shape[0]
     x = jnp.take(params["embed"], token, axis=0).astype(CDT)
     if cfg.embed_scale:
@@ -427,20 +481,22 @@ def decode_step(params, cfg: ArchConfig, caches, token, pos, *, aux=None,
     cfg_nr = _dc.replace(cfg, remat=False)      # no remat in inference steps
     x, new_caches = _iter_groups(cfg_nr, body, x, (params["groups"], caches),
                                  cfg.n_groups)
-    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
-    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
-    logits = (x @ head.astype(CDT)).astype(jnp.float32)
-    if cfg.softcap_final:
-        logits = cfg.softcap_final * jnp.tanh(logits / cfg.softcap_final)
-    return constrain(logits, "batch", None, "vocab"), new_caches
+    return _head_logits(params, cfg, x), new_caches
 
 
-def prefill(params, cfg: ArchConfig, tokens, *, aux=None, pim_ctx=None):
+def prefill(params, cfg: ArchConfig, tokens, *, aux=None, pim_ctx=None,
+            protected_kv=None, max_seq: Optional[int] = None):
     """Run the full prompt, building decode caches. Returns (logits, caches).
 
     The sequence axis is processed in full (scored prompt); caches are filled
     by scattering K/V at all positions (self-attn) and computing cross K/V /
     final mamba state.
+
+    With `protected_kv` (a `repro.models.kv.ProtectedKVConfig`), the dense
+    prompt caches are ingested into a `ProtectedKVCaches` manager — prompt
+    K/V quantized and device-encoded page by page — and that manager is
+    returned instead (`max_seq` sizes the dense non-protected entries;
+    defaults to the prompt length).
     """
     B, Stok = tokens.shape
     x = jnp.take(params["embed"], tokens, axis=0).astype(CDT)
@@ -497,13 +553,14 @@ def prefill(params, cfg: ArchConfig, tokens, *, aux=None, pim_ctx=None):
         return x, caches
 
     x, caches = _iter_groups(cfg, body, x, params["groups"], cfg.n_groups)
-
-    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
-    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
-    logits = (x @ head.astype(CDT)).astype(jnp.float32)
-    if cfg.softcap_final:
-        logits = cfg.softcap_final * jnp.tanh(logits / cfg.softcap_final)
-    return constrain(logits, "batch", None, "vocab"), caches
+    logits = _head_logits(params, cfg, x)
+    if protected_kv is not None:
+        from .kv import ProtectedKVCaches
+        pkv_caches = ProtectedKVCaches(cfg, protected_kv, B,
+                                       max_seq or Stok)
+        pkv_caches.ingest_prefill(caches, Stok)
+        return logits, pkv_caches
+    return logits, caches
 
 
 # ---------------------------------------------------------------------------

@@ -8,6 +8,7 @@ annotated with logical axes via repro.distributed.sharding.constrain.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional
 
 import jax
@@ -129,6 +130,60 @@ def _attend(q, k, v, mask, softcap, *, impl="naive", causal=True, window=0):
     return out.reshape(B, Sq, Hq, D)
 
 
+@functools.partial(jax.jit, static_argnames=("softcap",))
+def _paged_attn_update(q, kpg, vpg, valid, m, l, acc, softcap=0.0):
+    """One online-softmax step over a KV page (flash-attention recurrence,
+    page-granular). q: (B,Sq,Hq,D); kpg/vpg: (B,T,Hkv,D); valid: () int32 —
+    tokens of the page that are real (pad slots masked). Carries
+    (m, l, acc) in fp32; fixed page shapes mean ONE cached executable
+    serves every page of a layer."""
+    B, Sq, Hq, D = q.shape
+    T, Hkv = kpg.shape[1], kpg.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, D)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kpg).astype(jnp.float32)
+    logits = _softcap(logits / jnp.sqrt(D).astype(jnp.float32), softcap)
+    ok = jnp.arange(T)[None, None, None, None, :] < valid
+    logits = jnp.where(ok, logits, -1e30)
+    pm = logits.max(axis=-1, keepdims=True)          # (B,Hkv,G,Sq,1)
+    new_m = jnp.maximum(m, pm)
+    w = jnp.exp(logits - new_m)
+    corr = jnp.exp(m - new_m)
+    new_l = corr * l + w.sum(axis=-1, keepdims=True)
+    new_acc = corr * acc + jnp.einsum(
+        "bhgqk,bkhd->bhgqd", w, vpg.astype(jnp.float32))
+    return new_m, new_l, new_acc
+
+
+def _attend_paged(q, pages, softcap):
+    """Streaming attention over an iterator of decoded KV pages.
+
+    `pages` yields (k_page (B,T,Hkv,D), v_page, valid_tokens) — the
+    protected KV-cache read path (`repro.models.kv.ProtectedKVLayer.pages`):
+    page i+1's decode is dispatched by the generator while this loop's
+    softmax/accumulate runs on page i, so ECC decode overlaps attention
+    instead of interrupting it. Equivalent to `_attend` over the
+    concatenated pages (online softmax is exact).
+    """
+    B, Sq, Hq, D = q.shape
+    m = l = acc = None
+    for kpg, vpg, valid in pages:
+        if m is None:
+            Hkv = kpg.shape[2]
+            G = Hq // Hkv
+            m = jnp.full((B, Hkv, G, Sq, 1), -jnp.inf, jnp.float32)
+            l = jnp.zeros((B, Hkv, G, Sq, 1), jnp.float32)
+            acc = jnp.zeros((B, Hkv, G, Sq, D), jnp.float32)
+        m, l, acc = _paged_attn_update(
+            q, kpg, vpg, jnp.asarray(valid, jnp.int32), m, l, acc,
+            softcap=float(softcap or 0.0))
+    if m is None:
+        raise ValueError("paged attention needs at least one KV page")
+    out = acc / jnp.maximum(l, 1e-30)
+    out = out.transpose(0, 3, 1, 2, 4)               # (B,Sq,Hkv,G,D)
+    return out.reshape(B, Sq, Hq, D).astype(q.dtype)
+
+
 def attention_apply(params, x, spec: LayerSpec, cfg: ArchConfig, *,
                     positions, kv_cache=None, cache_pos=None, aux_kv=None,
                     pim_ctx=None):
@@ -136,7 +191,11 @@ def attention_apply(params, x, spec: LayerSpec, cfg: ArchConfig, *,
 
     Training/prefill: kv_cache None -> causal full pass, returns (y, new_cache
     or None). Decode: kv_cache dict {"k","v"} (B, Smax, Hkv, D) + cache_pos
-    scalar -> one-token update. Cross: aux_kv = precomputed (k, v).
+    scalar -> one-token update; a {"paged": ProtectedKVLayer} dict instead
+    routes the read through the protected paged store (append the token's
+    K/V — quantize + device-encode on page fill — then stream decoded pages
+    through the online-softmax `_attend_paged`, decode overlapping
+    attention). Cross: aux_kv = precomputed (k, v).
     """
     B, S, _ = x.shape
     hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -144,6 +203,7 @@ def attention_apply(params, x, spec: LayerSpec, cfg: ArchConfig, *,
     q = constrain(q, "batch", None, "heads", None)
 
     new_cache = None
+    paged = kv_cache.get("paged") if isinstance(kv_cache, dict) else None
     if spec.cross:
         k, v = aux_kv                                  # precomputed, cached
         mask = None
@@ -152,6 +212,18 @@ def attention_apply(params, x, spec: LayerSpec, cfg: ArchConfig, *,
         v = (x @ params["wv"].astype(CDT)).reshape(B, S, hkv, dh)
         q = rope(q, positions, cfg.rope_theta)
         k = rope(k, positions, cfg.rope_theta)
+        if paged is not None:
+            paged.append(k.astype(CDT), v.astype(CDT))
+            out = _attend_paged(q, paged.pages(), cfg.softcap_attn)
+            out = constrain(out, "batch", None, "heads", None)
+            out = out.reshape(B, S, hq * dh)
+            if pim_ctx is not None and "attn_o" in pim_ctx.targets:
+                y = pim_ctx.matmul(out, params["wo"], "attn_o",
+                                   enc=params.get("wo_enc"),
+                                   alpha=params.get("wo_alpha"))
+            else:
+                y = out @ params["wo"].astype(CDT)
+            return constrain(y, "batch", None, None), None
         if kv_cache is not None:
             # single-token decode: scatter into the cache. Sliding-window
             # layers allocate the cache as a ring of size W = local_window and

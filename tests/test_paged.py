@@ -1,0 +1,344 @@
+"""Device-resident paged protected store + protected KV-cache serving path.
+
+Covers the two-backend split (host `ProtectedMemoryArray` vs device
+`PagedProtectedStore`), the device `encode_words` op against its oracles,
+the pipelined corrected-read path, the quantization bridge, paged
+online-softmax attention, and the model-stack serving integration.
+"""
+import types
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (decode_pipelined, decode_stream, get_code,
+                        np_encode_words)
+from repro.memory import (PagedProtectedStore, ProtectedMemoryArray,
+                          asymmetric_adjacent, dequantize_tensor,
+                          quantize_tensor, words_for_tensor)
+
+
+def _corrupt(rng, code, B, errs):
+    w = rng.integers(0, code.p, (B, code.k))
+    cw = np_encode_words(w, code)
+    y = cw.copy()
+    for b in range(B):
+        pos = rng.choice(code.n, size=errs, replace=False)
+        y[b, pos] = (y[b, pos] + 1) % code.p
+    return jnp.asarray(y, jnp.int32), cw
+
+
+# ---------------------------------------------------------------------------
+# host backend round-trips (dtypes / odd shapes)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", ["float32", "float16", "int8"])
+def test_array_roundtrip_dtypes(rng, dtype):
+    mem = ProtectedMemoryArray("wl40_r08")
+    x = rng.normal(size=(5, 7)).astype(dtype) if dtype != "int8" \
+        else rng.integers(-128, 128, (5, 7), np.int8)
+    mem.write("x", x)
+    out = mem.read("x")
+    assert out.dtype == np.dtype(dtype) and out.shape == x.shape
+    assert np.array_equal(out, x)
+    out[0, 0] = out[0, 0]          # writable
+
+
+def test_array_roundtrip_odd_shapes(rng):
+    mem = ProtectedMemoryArray("wl40_r08")
+    # 0-d scalar
+    mem.write("scalar", np.float32(3.25))
+    got = mem.read("scalar")
+    assert got.shape == () and got == np.float32(3.25)
+    # empty tensor
+    mem.write("empty", np.zeros((0, 3), np.float32))
+    got = mem.read("empty")
+    assert got.shape == (0, 3) and got.size == 0
+    # non-contiguous view: packing serializes logical order
+    base = rng.normal(size=(8, 6)).astype(np.float32)
+    view = base[::2, 1::2]
+    assert not view.flags["C_CONTIGUOUS"]
+    mem.write("view", view)
+    assert np.array_equal(mem.read("view"), np.ascontiguousarray(view))
+
+
+# ---------------------------------------------------------------------------
+# decode_stream: boundaries + eager mesh validation
+# ---------------------------------------------------------------------------
+
+
+def test_decode_stream_exact_chunk_boundary(rng):
+    code = get_code("wl80_r08")
+    y, cw = _corrupt(rng, code, 12, 1)           # exactly 2 chunks of 6
+    outs = list(decode_stream(code, y, chunk_size=6, n_iters=12,
+                              damping=0.3))
+    assert [o[0].shape[0] for o in outs] == [6, 6]
+    got = np.concatenate([np.asarray(r.symbols) for _, r in outs])
+    assert np.array_equal(got, cw)
+
+
+def test_decode_stream_single_ragged_chunk(rng):
+    code = get_code("wl80_r08")
+    y, cw = _corrupt(rng, code, 3, 1)            # one ragged chunk < size
+    outs = list(decode_stream(code, y, chunk_size=8, n_iters=12,
+                              damping=0.3))
+    assert len(outs) == 1 and outs[0][0].shape[0] == 3
+    assert np.array_equal(np.asarray(outs[0][1].symbols), cw)
+
+
+def test_decode_stream_mesh_divisibility_validated_eagerly(rng):
+    code = get_code("wl40_r08")
+    y, _ = _corrupt(rng, code, 4, 1)
+    fake_mesh = types.SimpleNamespace(shape={"data": 3})
+    with pytest.raises(ValueError, match="chunk_size=8.*mesh\\s+size 3"):
+        # at CALL time — not on first next(), not deep inside shard_map
+        decode_stream(code, y, chunk_size=8, mesh=fake_mesh)
+    with pytest.raises(ValueError, match="chunk_size=4"):
+        decode_pipelined(code, y, chunk_size=4, mesh=fake_mesh)
+
+
+def test_decode_pipelined_matches_stream(rng):
+    code = get_code("wl40_r08")
+    y, _cw = _corrupt(rng, code, 22, 1)
+    ref = [np.asarray(r.symbols) for _, r in
+           decode_stream(code, y, chunk_size=8, n_iters=8, damping=0.3)]
+    for depth in (1, 3):
+        got = [np.asarray(r.symbols) for _, r in
+               decode_pipelined(code, y, chunk_size=8, n_iters=8,
+                                damping=0.3, depth=depth)]
+        assert [g.shape[0] for g in got] == [8, 8, 6]
+        assert np.array_equal(np.concatenate(got), np.concatenate(ref))
+    with pytest.raises(ValueError, match="depth"):
+        decode_pipelined(code, y, depth=0)
+
+
+# ---------------------------------------------------------------------------
+# device encode op: kernel vs oracle vs host
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["wl40_r08", "wl160_r08_gf5",
+                                  "wl160_r08_gf7"])
+def test_encode_words_kernel_matches_host_oracle(rng, name):
+    from repro.kernels.ops import encode_words
+    from repro.kernels.ref import encode_words_ref
+    code = get_code(name)
+    u = jnp.asarray(rng.integers(0, code.p, (17, code.k)), jnp.int32)
+    P = jnp.asarray(code.P, jnp.int32)
+    host = np_encode_words(np.asarray(u), code)
+    kern = np.asarray(encode_words(u, P, code.p))
+    ref = np.asarray(encode_words_ref(u, P, code.p))
+    assert np.array_equal(kern, host)
+    assert np.array_equal(ref, host)
+
+
+def test_paged_store_encode_parity_both_backends(rng):
+    code = get_code("wl80_r08")
+    u = rng.integers(0, code.p, (21, code.k))
+    host = np_encode_words(u, code)
+    for backend in ("kernel", "ref"):
+        st = PagedProtectedStore(code, page_words=8, backend=backend)
+        st.append_words(u)
+        assert np.array_equal(st.export_words().astype(np.int64), host)
+        assert np.array_equal(np.asarray(st.read_info(0, 21)), u)
+
+
+# ---------------------------------------------------------------------------
+# paged store behavior
+# ---------------------------------------------------------------------------
+
+
+def test_paged_store_corrects_and_scrubs(rng):
+    code = get_code("wl80_r08")
+    st = PagedProtectedStore(code, page_words=16, n_iters=12)
+    u = rng.integers(0, code.p, (40, code.k))
+    st.append_words(u)
+    # exactly one wrong cell per word (always inside wl80's correction
+    # strength) via the channel's conditional sampler
+    ch = asymmetric_adjacent(code.p, 2e-3, 1e-3)
+    for i in range(st.n_pages):
+        st._pages[i] = ch.corrupt_exact(jax.random.PRNGKey(i),
+                                        st.page(i), 1)
+    assert st.scan_flags().sum() == st.n_words
+    # pipelined == synchronous whole-store read
+    piped = np.concatenate([np.asarray(p) for p in
+                            st.iter_corrected()])[:st.n_words]
+    sync = np.asarray(st.read_corrected())
+    assert np.array_equal(piped, sync)
+    assert np.array_equal(sync[:, :code.k], u)          # fully corrected
+    rep = st.scrub()
+    # pad rows of the trailing page were corrupted too: scrub sweeps them
+    assert rep["repaired_words"] == rep["flagged_words"] >= st.n_words
+    assert st.scan_flags().sum() == 0                    # storage repaired
+
+
+def test_paged_store_incremental_append_and_ranges(rng):
+    code = get_code("wl40_r08")
+    st = PagedProtectedStore(code, page_words=8)
+    a0 = rng.integers(0, code.p, (5, code.k))
+    a1 = rng.integers(0, code.p, (9, code.k))
+    r0 = st.append_words(a0)
+    r1 = st.append_words(a1)
+    assert r0 == (0, 5) and r1 == (5, 14) and st.n_pages == 2
+    assert np.array_equal(np.asarray(st.read_info(*r1)), a1)
+    # empty and page-aligned ranges are valid, not IndexErrors
+    assert st.read_words(14, 14).shape == (0, code.n)
+    assert st.read_words(8, 14).shape == (6, code.n)
+    empty = PagedProtectedStore(code, page_words=8)
+    assert empty.read_words(0, 0).shape == (0, code.n)
+    with pytest.raises(ValueError, match="word range"):
+        st.read_words(0, 99)
+    with pytest.raises(ValueError, match="info words"):
+        st.append_words(np.zeros((2, code.k + 1), np.int64))
+
+
+def test_paged_store_adopts_host_encoded_words(rng):
+    """Backend interop: host-encoded checkpoint words serve from the device
+    store without re-encoding."""
+    code = get_code("wl40_r08")
+    mem = ProtectedMemoryArray(code)
+    x = rng.normal(size=(4, 4)).astype(np.float32)
+    mem.write("x", x)
+    st = PagedProtectedStore(code, page_words=8)
+    lo, hi = st.append_encoded(mem.stored("x").enc)
+    host_words = mem.stored("x").enc.astype(np.int64) % code.p
+    assert np.array_equal(np.asarray(st.read_words(lo, hi)), host_words)
+
+
+def test_paged_store_validation():
+    with pytest.raises(ValueError, match="page_words"):
+        PagedProtectedStore("wl40_r08", page_words=0)
+    with pytest.raises(ValueError, match="backend"):
+        PagedProtectedStore("wl40_r08", backend="gpu")
+    fake_mesh = types.SimpleNamespace(shape={"data": 3})
+    with pytest.raises(ValueError, match="page_words=8.*mesh"):
+        PagedProtectedStore("wl40_r08", page_words=8, mesh=fake_mesh)
+
+
+# ---------------------------------------------------------------------------
+# quantization bridge
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_quantize_roundtrip_within_step(rng, dtype):
+    code = get_code("wl40_r08")
+    x = jnp.asarray(rng.normal(size=(3, 5, 2)), dtype)
+    w, meta = quantize_tensor(x, code.p, code.k)
+    assert w.shape == (words_for_tensor(x.shape, code.p, code.k), code.k)
+    assert int(w.min()) >= 0 and int(w.max()) < code.p
+    back = dequantize_tensor(w, meta, code.p)
+    assert back.dtype == x.dtype and back.shape == x.shape
+    err = jnp.max(jnp.abs(back.astype(jnp.float32) - x.astype(jnp.float32)))
+    # absmax int8: half a quantization step (+ bf16 representation error)
+    assert float(err) <= float(meta.scale) * 0.51 + 0.01
+
+
+# ---------------------------------------------------------------------------
+# paged attention == dense attention
+# ---------------------------------------------------------------------------
+
+
+def test_paged_attention_matches_dense(rng):
+    from repro.nn.layers import _attend, _attend_paged
+    B, Sq, Hq, Hkv, D, T = 2, 1, 4, 2, 8, 5
+    q = jnp.asarray(rng.normal(size=(B, Sq, Hq, D)), jnp.float32)
+    ks = [jnp.asarray(rng.normal(size=(B, T, Hkv, D)), jnp.float32)
+          for _ in range(3)]
+    vs = [jnp.asarray(rng.normal(size=(B, T, Hkv, D)), jnp.float32)
+          for _ in range(3)]
+    valid_last = 2                               # ragged hot page
+    pages = [(ks[0], vs[0], T), (ks[1], vs[1], T),
+             (ks[2], vs[2], valid_last)]
+    out = _attend_paged(q, iter(pages), 0.0)
+    k_all = jnp.concatenate([ks[0], ks[1], ks[2][:, :valid_last]], axis=1)
+    v_all = jnp.concatenate([vs[0], vs[1], vs[2][:, :valid_last]], axis=1)
+    ref = _attend(q, k_all, v_all, None, 0.0, causal=False)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=0, atol=2e-2)
+
+
+# ---------------------------------------------------------------------------
+# protected KV serving through the model stack
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny_lm():
+    from repro.configs import get_config
+    from repro.models import init_params
+    cfg = get_config("paper_pim").reduced(n_groups=2, d_model=32,
+                                          n_heads=2, d_ff=64, vocab=128)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _decode_some(params, cfg, caches, toks, S, steps=3):
+    from repro.models import decode_step
+    tok = toks[:, -1:]
+    outs = []
+    for i in range(steps):
+        logits, caches = decode_step(params, cfg, caches, tok,
+                                     jnp.asarray(S + i))
+        outs.append(logits)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jnp.concatenate(outs, axis=1), caches
+
+
+def test_protected_kv_serving_matches_dense(tiny_lm):
+    from repro.models import ProtectedKVConfig, init_caches, prefill
+    cfg, params = tiny_lm
+    B, S = 2, 12
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                              cfg.vocab_size)
+    lg_d, dense = prefill(params, cfg, toks)
+    full = init_caches(cfg, B, S + 4)
+    dense = jax.tree.map(
+        lambda d, s: s if d.shape == s.shape
+        else jnp.pad(s, [(0, a - b) for a, b in zip(d.shape, s.shape)]),
+        full, dense)
+    ref, _ = _decode_some(params, cfg, dense, toks, S)
+
+    pkv = ProtectedKVConfig(code_name="wl40_r08", page_tokens=4)
+    lg_p, pc = prefill(params, cfg, toks, protected_kv=pkv, max_seq=S + 4)
+    assert np.allclose(np.asarray(lg_p), np.asarray(lg_d))   # same prefill
+    got, pc = _decode_some(params, cfg, pc, toks, S)
+    # int8-quantized KV: logits agree to quantization noise
+    assert float(jnp.max(jnp.abs(got - ref))) < 0.05
+    st = pc.stats()
+    assert st["protected_layers"] == cfg.n_groups
+    assert st["tokens"] == S + 3
+
+
+def test_protected_kv_serving_corrects_corruption(tiny_lm):
+    from repro.models import ProtectedKVConfig, prefill
+    cfg, params = tiny_lm
+    B, S = 2, 12
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                              cfg.vocab_size)
+    ch = asymmetric_adjacent(3, 5e-4, 5e-4)
+
+    def run(corrected, inject):
+        pkv = ProtectedKVConfig(code_name="wl80_r08", page_tokens=4,
+                                corrected=corrected, n_iters=16)
+        _lg, pc = prefill(params, cfg, toks, protected_kv=pkv,
+                          max_seq=S + 4)
+        if inject:
+            assert pc.inject(ch, key=5) > 0
+        out, pc = _decode_some(params, cfg, pc, toks, S)
+        return np.asarray(out), pc
+
+    clean, _ = run(True, False)
+    corrected, pc = run(True, True)
+    raw, _ = run(False, True)
+    # the decoder restores the exact stored words -> identical logits
+    assert np.array_equal(corrected, clean)
+    # the raw-level ablation actually sees the corruption
+    assert not np.array_equal(raw, clean)
+    # scrub repairs storage in place
+    rep = pc.scrub()
+    assert rep["repaired_words"] == rep["flagged_words"] > 0
+    assert pc.stats()["flagged_words"] == 0

@@ -1,0 +1,226 @@
+"""Multi-tenant protected serving benchmark: aggregate throughput, tail
+latency, and correctness of the continuous-batching engine
+(`repro.serving.ServingEngine`) over the shared protected page pool.
+
+Measurement families:
+
+- **scaling** — aggregate tokens/s and p99 step latency vs concurrent
+  sequence count (1/4/16, plus 64 in full mode), protected (pool-backed
+  NB-LDPC pages) vs dense (same engine, raw KV rows). Batched slots amortize
+  every executable across tenants, so aggregate throughput must rise
+  steeply with occupancy (acceptance: >= 2x going 1 -> 16 protected).
+- **bit-exactness** — every tenant of the 16-way protected run re-served
+  alone in a same-shape engine must produce identical tokens (slot rows are
+  computation-independent; quantize-on-freeze is deterministic).
+- **scrub overhead** — the same noisy 16-way run with background pool
+  scrubbing interleaved between steps (bounded cold-page sweeps) must keep
+  >= 80% of the no-scrub aggregate throughput (acceptance: < 20% cost).
+
+CLI:  PYTHONPATH=src python -m benchmarks.bench_multitenant
+        [--quick] [--json PATH] [--rows PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import get_code
+from repro.memory import ProtectedPagePool, asymmetric_adjacent
+from repro.memory.paged import words_for_tensor
+from repro.models import ProtectedKVConfig, init_params
+from repro.serving import ServingEngine
+
+from .rows import DEFAULT_PATH, append_rows
+
+CODE_NAME = "wl160_r08"
+
+
+def _setup(quick: bool):
+    cfg = get_config("paper_pim")
+    if quick:
+        cfg = cfg.reduced(n_groups=2, d_model=64, n_heads=4, d_ff=128)
+        S, gen, page_tokens = 12, 12, 8
+        counts = [1, 4, 16]
+    else:
+        cfg = cfg.reduced(n_groups=4, d_model=128, n_heads=4, d_ff=256)
+        S, gen, page_tokens = 24, 24, 8
+        counts = [1, 4, 16, 64]
+    # 3x-scaled init: sharp logits, so every tenant's rollout carries real
+    # signal (same trick as bench_kv_serving)
+    params = jax.tree.map(lambda t: t * 3.0,
+                          init_params(jax.random.PRNGKey(0), cfg))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, S) for _ in range(counts[-1])]
+    return cfg, params, prompts, gen, page_tokens, counts
+
+
+def _make_pool(cfg, page_tokens: int, capacity: int) -> ProtectedPagePool:
+    code = get_code(CODE_NAME)
+    wpu = words_for_tensor((1, page_tokens, cfg.n_kv_heads, cfg.head_dim),
+                           code.p, code.k)
+    return ProtectedPagePool(code, page_words=wpu, capacity_pages=capacity)
+
+
+def _timed_run(eng: ServingEngine, prompts, gen: int, *, inject_eps=0.0,
+               inject_steps=(), max_steps=100000):
+    """Submit one sequence per prompt, step to completion, return
+    (results, tokens, elapsed_s, per-step seconds)."""
+    for t, pr in enumerate(prompts):
+        eng.submit(t, pr, max_new=gen)
+    ch = (asymmetric_adjacent(get_code(CODE_NAME).p, inject_eps,
+                              inject_eps / 2) if inject_eps else None)
+    lats, tokens, steps = [], 0, 0
+    t_start = time.perf_counter()
+    while eng.waiting or any(s is not None for s in eng.slots):
+        if steps >= max_steps:
+            raise RuntimeError("run exceeded max_steps")
+        t0 = time.perf_counter()
+        rep = eng.step()
+        lats.append(time.perf_counter() - t0)
+        tokens += rep["tokens"]
+        if ch is not None and steps in inject_steps:
+            eng.inject(ch, key=50 + steps)
+        steps += 1
+    elapsed = time.perf_counter() - t_start
+    results = {s.tenant: list(s.generated) for s in eng.sequences}
+    return results, tokens, elapsed, lats
+
+
+def _engine(params, cfg, n: int, gen: int, page_tokens: int, *,
+            protected: bool, pool=None, scrub: bool = False):
+    pkv = ProtectedKVConfig(code_name=CODE_NAME, page_tokens=page_tokens)
+    kw = dict(scrub_every=2, scrub_max_pages=8) if scrub else {}
+    return ServingEngine(params, cfg, pkv=pkv, pool=pool, max_active=n,
+                         max_seq=64, protected=protected, **kw)
+
+
+def _p99_ms(lats) -> float:
+    return round(float(np.percentile(np.asarray(lats) * 1e3, 99)), 2)
+
+
+def main(quick: bool = False):
+    cfg, params, prompts, gen, page_tokens, counts = _setup(quick)
+    n_layers = cfg.n_groups * len(cfg.group_spec)
+    pages_per_seq = -(-(len(prompts[0]) + gen) // page_tokens)
+    capacity = counts[-1] * pages_per_seq * 2 * n_layers + 8
+    pool = _make_pool(cfg, page_tokens, capacity)   # shared: one executable
+                                                    # set for every engine
+    rows = []
+    tps = {}
+
+    for n in counts:
+        for protected in (True, False):
+            # warm the executables for this batch shape before timing
+            warm = _engine(params, cfg, n, gen, page_tokens,
+                           protected=protected, pool=pool if protected
+                           else None)
+            _timed_run(warm, prompts[:n], 3)
+            eng = _engine(params, cfg, n, gen, page_tokens,
+                          protected=protected, pool=pool if protected
+                          else None)
+            res, tokens, dt, lats = _timed_run(eng, prompts[:n], gen)
+            tag = "protected" if protected else "dense"
+            tps[(n, tag)] = tokens / dt
+            rows.append({
+                "section": "scaling", "mode": tag, "sequences": n,
+                "prompt": len(prompts[0]), "gen": gen,
+                "tokens": tokens,
+                "tokens_per_s": round(tokens / dt, 2),
+                "p99_step_ms": _p99_ms(lats),
+                "mean_step_ms": round(float(np.mean(lats)) * 1e3, 2),
+                "preemptions": eng.stats()["preemptions"],
+            })
+            if protected and n == 16:
+                ref16 = res
+
+    # bit-exactness: each of the 16 tenants re-served alone in a same-shape
+    # engine (identical executables and page schedule, one occupied slot)
+    bit_exact = True
+    if 16 in counts:
+        for t in range(16):
+            solo = _engine(params, cfg, 16, gen, page_tokens,
+                           protected=True, pool=pool)
+            res, *_ = _timed_run(solo, [prompts[t]], gen)
+            if res[0] != ref16[t]:
+                bit_exact = False
+                break
+        rows.append({"section": "bit_exact", "sequences": 16,
+                     "tenants_checked": 16, "pass": bool(bit_exact)})
+
+    # scrub interleave: noisy 16-way serving with and without background
+    # pool scrubbing (same injections), aggregate throughput ratio
+    n_scrub = 16 if 16 in counts else counts[-1]
+    scrub_res = {}
+    for scrub in (False, True):
+        # warm with an injection so the decoder executable compiles outside
+        # the timed region (the clean scaling runs never decode)
+        warm = _engine(params, cfg, n_scrub, gen, page_tokens,
+                       protected=True, pool=pool, scrub=scrub)
+        _timed_run(warm, prompts[:n_scrub], 3, inject_eps=2e-4,
+                   inject_steps=(0,))
+        eng = _engine(params, cfg, n_scrub, gen, page_tokens,
+                      protected=True, pool=pool, scrub=scrub)
+        # the pool (and its scrub counters) is shared bench-wide: delta them
+        rounds0 = pool.stats.scrub_rounds
+        repaired0 = pool.stats.scrub_corrected
+        res, tokens, dt, lats = _timed_run(
+            eng, prompts[:n_scrub], gen, inject_eps=2e-4,
+            inject_steps=(2, 5))
+        scrub_res[scrub] = (res, tokens / dt, lats,
+                            pool.stats.scrub_rounds - rounds0,
+                            pool.stats.scrub_corrected - repaired0)
+    tps_noscrub, tps_scrub = scrub_res[False][1], scrub_res[True][1]
+    scrub_cost = 1.0 - tps_scrub / tps_noscrub
+    scrub_outputs_match = scrub_res[True][0] == scrub_res[False][0]
+    rows.append({
+        "section": "scrub", "sequences": n_scrub,
+        "tokens_per_s_no_scrub": round(tps_noscrub, 2),
+        "tokens_per_s_scrub": round(tps_scrub, 2),
+        "scrub_cost_frac": round(scrub_cost, 4),
+        "p99_step_ms_scrub": _p99_ms(scrub_res[True][2]),
+        "scrub_rounds": scrub_res[True][3],
+        "scrub_repaired_words": scrub_res[True][4],
+        "outputs_match_no_scrub": bool(scrub_outputs_match),
+    })
+
+    hi = 16 if 16 in counts else counts[-1]
+    scaling = tps[(hi, "protected")] / tps[(1, "protected")]
+    rows.append({
+        "section": "acceptance", "code": CODE_NAME,
+        "protected_tps_1": round(tps[(1, "protected")], 2),
+        "protected_tps_16": round(tps[(hi, "protected")], 2),
+        "scaling_1_to_16": round(scaling, 2),
+        "dense_tps_16": round(tps[(hi, "dense")], 2),
+        "bit_exact": bool(bit_exact),
+        "scrub_cost_frac": round(scrub_cost, 4),
+        "pass": bool(scaling >= 2.0 and bit_exact and scrub_cost < 0.2
+                     and scrub_outputs_match),
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke mode: tiny model, 1/4/16 sequences")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write measurement rows as JSON")
+    ap.add_argument("--rows", default=DEFAULT_PATH, metavar="PATH",
+                    help="append standardized rows here ('' disables)")
+    args = ap.parse_args()
+    if args.json:        # fail fast on an unwritable path, not after minutes
+        with open(args.json, "a"):
+            pass
+    out = main(quick=args.quick)
+    for row in out:
+        print(row)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=2, default=str)
+    if args.rows:
+        append_rows(args.rows, "multitenant", out)

@@ -19,6 +19,7 @@ BENCHES = [
     ("memory_mode", "benchmarks.bench_memory_mode"),
     ("scrub_engine", "benchmarks.bench_scrub"),
     ("kv_serving", "benchmarks.bench_kv_serving"),
+    ("multitenant", "benchmarks.bench_multitenant"),
     ("dse_fig7", "benchmarks.bench_dse"),
 ]
 
@@ -89,6 +90,16 @@ def main() -> None:
               f"delta {a['ppl_delta_protected']} protected vs "
               f"{a['ppl_delta_unprotected']} unprotected @ raw 1e-2 "
               f"(pass={a['pass']})")
+    mt = all_rows.get("multitenant", [])
+    macc = [r for r in mt if r.get("section") == "acceptance"]
+    if macc:
+        a = macc[0]
+        print(f"multi-tenant serving [{a['code']}]: aggregate "
+              f"{a['protected_tps_1']} -> {a['protected_tps_16']} tok/s "
+              f"(1 -> 16 tenants, {a['scaling_1_to_16']}x, acceptance >= "
+              f"2x), bit_exact={a['bit_exact']}, concurrent scrub cost "
+              f"{a['scrub_cost_frac'] * 100:.1f}% (acceptance < 20%), "
+              f"pass={a['pass']}")
     os.makedirs("results", exist_ok=True)
     from .rows import append_rows
     for name, rows in all_rows.items():

@@ -12,12 +12,16 @@
 - `paged`      — `PagedProtectedStore`: the device-resident backend (pages
                  as jax arrays, device encode/scan, pipelined corrected
                  reads) serving live workloads such as protected KV caches;
+- `pool`       — `ProtectedPagePool` / `PooledStore`: the multi-tenant layer
+                 (shared ref-counted page pool, block tables, copy-on-write
+                 aliasing, cold-page background scrub);
 - `packing`    — the byte<->GF(p) symbolization shared by both backends.
 """
 from .array import (ProtectedMemoryArray, StoredTensor, symbolize_bytes,
                     desymbolize_bytes, digits_per_byte)
 from .paged import (PagedProtectedStore, QuantizedTensor, quantize_tensor,
                     dequantize_tensor, words_for_tensor)
+from .pool import PoolExhausted, ProtectedPagePool, PooledStore
 from .channel import (Channel, LevelTransition, RetentionDrift, ReadDisturb,
                       StuckAt, Compose, PlusMinusOne, uniform_flip,
                       asymmetric_adjacent, validate_transition)
@@ -34,6 +38,7 @@ __all__ = [
     "desymbolize_bytes", "digits_per_byte",
     "PagedProtectedStore", "QuantizedTensor", "quantize_tensor",
     "dequantize_tensor", "words_for_tensor",
+    "PoolExhausted", "ProtectedPagePool", "PooledStore",
     "Channel", "LevelTransition", "RetentionDrift", "ReadDisturb", "StuckAt",
     "Compose", "PlusMinusOne", "uniform_flip", "asymmetric_adjacent",
     "validate_transition",

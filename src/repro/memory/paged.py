@@ -43,6 +43,7 @@ from repro.core.decode import decode_integers
 from repro.core.protected import decode_pipelined, np_prod_mesh
 
 from .channel import Channel
+from .controller import ControllerStats
 from .packing import digits_per_byte, symbolize_u8, desymbolize_u8
 
 __all__ = ["PagedProtectedStore", "QuantizedTensor", "quantize_tensor",
@@ -157,6 +158,9 @@ class PagedProtectedStore:
         self._encode_fn = None
         self._scan_fn = None
         self._decode_fn = None
+        # read/scrub correction accounting (per-store, so a serving layer can
+        # attribute corrections to the tenant that owns the store)
+        self.stats = ControllerStats()
 
     # -- introspection ------------------------------------------------------
 
@@ -174,6 +178,29 @@ class PagedProtectedStore:
 
     def page(self, i: int) -> jnp.ndarray:
         return self._pages[i]
+
+    # -- storage indirection -------------------------------------------------
+    # All page reads/writes go through these four primitives. The standalone
+    # store owns a plain list of jax arrays; `repro.memory.pool.PooledStore`
+    # overrides them to address a shared ref-counted page pool through a
+    # per-tenant block table instead.
+
+    def _set_page(self, i: int, page: jnp.ndarray) -> None:
+        self._pages[i] = page
+
+    def _append_page(self) -> None:
+        """Grow storage by one zeroed page."""
+        self._pages.append(self._new_page())
+
+    def _iter_pages(self) -> Iterator[jnp.ndarray]:
+        for i in range(self.n_pages):
+            yield self.page(i)
+
+    def free(self) -> None:
+        """Release all storage (pool-backed stores return their pages to the
+        shared free list; the standalone store just drops them)."""
+        self._pages.clear()
+        self._n_words = 0
 
     # -- cached executables -------------------------------------------------
 
@@ -259,19 +286,21 @@ class PagedProtectedStore:
                              f"{tuple(u.shape)}")
         m = u.shape[0]
         start = self._n_words
-        pw, n = self.page_words, self.code.n
+        pw = self.page_words
         done = 0
         while done < m:
             slot = self._n_words % pw
             if slot == 0:
-                self._pages.append(self._new_page())
+                self._append_page()
             take = min(m - done, pw - slot)
             enc = self._encode_rows(u[done:done + take])
-            page = self._pages[-1]
-            self._pages[-1] = jax.lax.dynamic_update_slice(
-                page, enc, (slot, 0))
+            last = self.n_pages - 1
+            self._set_page(last, jax.lax.dynamic_update_slice(
+                self.page(last), enc, (slot, 0)))
             done += take
             self._n_words += take
+        self.stats.writes += 1
+        self.stats.words_written += m
         return start, start + m
 
     def append_encoded(self, enc) -> Tuple[int, int]:
@@ -289,20 +318,23 @@ class PagedProtectedStore:
         while done < m:
             slot = self._n_words % pw
             if slot == 0:
-                self._pages.append(self._new_page())
+                self._append_page()
             take = min(m - done, pw - slot)
-            self._pages[-1] = jax.lax.dynamic_update_slice(
-                self._pages[-1], enc[done:done + take], (slot, 0))
+            last = self.n_pages - 1
+            self._set_page(last, jax.lax.dynamic_update_slice(
+                self.page(last), enc[done:done + take], (slot, 0)))
             done += take
             self._n_words += take
+        self.stats.writes += 1
+        self.stats.words_written += m
         return start, start + m
 
     def export_words(self) -> np.ndarray:
         """All valid stored codewords as one host (n_words, n) int8 array
         (checkpoint hand-off to the host backend)."""
-        if not self._pages:
+        if not self.n_pages:
             return np.zeros((0, self.code.n), np.int8)
-        flat = np.concatenate([np.asarray(pg) for pg in self._pages])
+        flat = np.concatenate([np.asarray(pg) for pg in self._iter_pages()])
         return flat[:self._n_words].astype(np.int8)
 
     # -- fault injection ----------------------------------------------------
@@ -326,12 +358,13 @@ class PagedProtectedStore:
             key = jax.random.PRNGKey(key)
         self._injections += 1
         changed = 0
-        for i, page in enumerate(self._pages):
+        for i in range(self.n_pages):
+            page = self.page(i)
             k = jax.random.fold_in(key, i)
             new = channel.apply(k, page, t=t, n_reads=n_reads)
             new = new.astype(jnp.int32)
             changed += int(jnp.sum(new != page))
-            self._pages[i] = new
+            self._set_page(i, new)
         return changed
 
     # -- read path ----------------------------------------------------------
@@ -339,10 +372,11 @@ class PagedProtectedStore:
     def scan_flags(self) -> np.ndarray:
         """(n_words,) bool — per-word nonzero-syndrome flags via the fused
         device scan, streamed page by page through one executable."""
-        if not self._pages:
+        if not self.n_pages:
             return np.zeros(0, bool)
         fn = self._scanner()
-        flags = np.concatenate([np.asarray(fn(pg)) for pg in self._pages])
+        flags = np.concatenate([np.asarray(fn(pg))
+                                for pg in self._iter_pages()])
         return flags[:self._n_words]
 
     def iter_corrected(self, *, scan_first: bool = True,
@@ -358,26 +392,50 @@ class PagedProtectedStore:
         decode = self._decoder()
 
         def dispatch(page):
-            if scan is not None and not bool(np.asarray(scan(page)).any()):
-                return page                       # clean: levels ARE symbols
+            if scan is not None:
+                nf = int(np.asarray(scan(page)).sum())
+                if not nf:
+                    return page                   # clean: levels ARE symbols
+                self.stats.detected += nf
             _y, res = decode(page)                # async dispatch
             return res.symbols
 
         pending = []
-        for page in self._pages:
+        for page in self._iter_pages():
+            self.stats.reads += 1
+            self.stats.words_read += self.page_words
             pending.append(dispatch(page))
             if len(pending) > depth:
                 yield pending.pop(0)
         yield from pending
 
+    def read_page_corrected(self, i: int) -> jnp.ndarray:
+        """Scan-gated synchronous corrected read of page `i`, with full
+        correction accounting on `self.stats` (detected / corrected /
+        uncorrectable). The per-page primitive the serving engine uses to
+        attribute corrections to the tenant owning this store."""
+        page = self.page(i)
+        self.stats.reads += 1
+        self.stats.words_read += self.page_words
+        flags = np.asarray(self._scanner()(page))
+        nf = int(flags.sum())
+        if not nf:
+            return page
+        self.stats.detected += nf
+        _y, res = self._decoder()(page)
+        bad = int((flags & np.asarray(res.detect_fail)).sum())
+        self.stats.uncorrectable += bad
+        self.stats.corrected += nf - bad
+        return res.symbols
+
     def read_corrected(self) -> jnp.ndarray:
         """Synchronous whole-store corrected read: every page decoded and
         stacked to (n_words, n) symbols. The baseline the pipelined read is
         benchmarked against."""
-        if not self._pages:
+        if not self.n_pages:
             return jnp.zeros((0, self.code.n), jnp.int32)
         decode = self._decoder()
-        outs = [decode(pg)[1].symbols for pg in self._pages]
+        outs = [decode(pg)[1].symbols for pg in self._iter_pages()]
         return jnp.concatenate(outs)[:self._n_words]
 
     def read_words(self, start: int, stop: int, *,
@@ -392,11 +450,8 @@ class PagedProtectedStore:
         pw = self.page_words
         out = []
         for pi in range(start // pw, (stop - 1) // pw + 1):
-            page = self._pages[pi]
-            if corrected:
-                scan = self._scanner()
-                if bool(np.asarray(scan(page)).any()):
-                    page = self._decoder()(page)[1].symbols
+            page = (self.read_page_corrected(pi) if corrected
+                    else self.page(pi))
             lo = max(start - pi * pw, 0)
             hi = min(stop - pi * pw, pw)
             out.append(page[lo:hi])
@@ -418,14 +473,19 @@ class PagedProtectedStore:
         kw.setdefault("llv_scale", self.llv_scale)
         kw.setdefault("llv_mode", self.llv_mode)
         kw.setdefault("mesh", self.mesh)
-        return decode_pipelined(self.code, iter(self._pages), **kw)
+        return decode_pipelined(self.code, self._iter_pages(), **kw)
 
-    def scrub(self) -> dict:
+    def scrub(self, pages=None) -> dict:
         """Sweep the pages: scan, decode flagged pages, write repairs back
-        (device-side). Returns {pages, flagged_words, repaired_words}."""
+        (device-side). `pages` optionally restricts the sweep to a subset of
+        page indices (the engine's cold-page background scrub). Returns
+        {pages, flagged_words, repaired_words}."""
         scan, decode = self._scanner(), self._decoder()
-        flagged_words = repaired = 0
-        for i, page in enumerate(self._pages):
+        idxs = range(self.n_pages) if pages is None else list(pages)
+        flagged_words = repaired = swept = 0
+        for i in idxs:
+            page = self.page(i)
+            swept += 1
             flags = scan(page)
             nf = int(jnp.sum(flags))
             if not nf:
@@ -433,7 +493,11 @@ class PagedProtectedStore:
             flagged_words += nf
             _y, res = decode(page)
             good = flags & ~res.detect_fail
-            self._pages[i] = jnp.where(good[:, None], res.symbols, page)
+            self._set_page(i, jnp.where(good[:, None], res.symbols, page))
             repaired += int(jnp.sum(good))
-        return {"pages": len(self._pages), "flagged_words": flagged_words,
+        self.stats.scrub_rounds += 1
+        self.stats.scrub_words += swept * self.page_words
+        self.stats.scrub_corrected += repaired
+        self.stats.scrub_uncorrectable += flagged_words - repaired
+        return {"pages": swept, "flagged_words": flagged_words,
                 "repaired_words": repaired}

@@ -38,6 +38,7 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig
 from repro.memory.paged import (PagedProtectedStore, dequantize_tensor,
                                 quantize_tensor, words_for_tensor)
+from repro.memory.pool import PooledStore, ProtectedPagePool
 
 __all__ = ["ProtectedKVConfig", "ProtectedKVLayer", "ProtectedKVCaches"]
 
@@ -56,6 +57,10 @@ class ProtectedKVConfig:
     overlap: bool = True           # False: block on every page decode
                                    # (synchronous whole-cache ablation)
     mesh: Any = None               # shard pages across a local device mesh
+    pool: Any = None               # ProtectedPagePool: back every layer's
+                                   # stores with shared pool pages (block
+                                   # tables) instead of private grow-only
+                                   # storage — the multi-tenant path
 
 
 class ProtectedKVLayer:
@@ -63,21 +68,41 @@ class ProtectedKVLayer:
     a dense hot page, and a memoized decoded view."""
 
     def __init__(self, pkv: ProtectedKVConfig, batch: int, hkv: int,
-                 dh: int, dtype=jnp.bfloat16):
+                 dh: int, dtype=jnp.bfloat16, owner: Any = None):
         self.pkv = pkv
         self.batch, self.hkv, self.dh = batch, hkv, dh
         self.dtype = dtype
+        self.owner = owner
         self.page_shape = (batch, pkv.page_tokens, hkv, dh)
-        store_kw = dict(n_iters=pkv.n_iters, damping=pkv.damping,
-                        mesh=pkv.mesh)
         from repro.core import get_code
         code = get_code(pkv.code_name)
         # one frozen KV page == exactly one store page, so the store's
         # pipelined page iterator IS the layer's page iterator
         wpu = words_for_tensor(self.page_shape, code.p, code.k)
-        self.k_store = PagedProtectedStore(code, page_words=wpu, **store_kw)
-        self.v_store = PagedProtectedStore(code, page_words=wpu, **store_kw)
+        if pkv.pool is not None:
+            pool: ProtectedPagePool = pkv.pool
+            if pool.page_words != wpu:
+                raise ValueError(
+                    f"pool page_words={pool.page_words} != {wpu} words per "
+                    f"KV page for page_shape {self.page_shape}; size the "
+                    "pool with words_for_tensor(page_shape, p, k)")
+            if (pool.code.n, pool.code.k, pool.code.p) != (code.n, code.k,
+                                                           code.p):
+                raise ValueError(
+                    f"pool code ({pool.code.n},{pool.code.k},p{pool.code.p})"
+                    f" != KV code ({code.n},{code.k},p{code.p})")
+            self.k_store = PooledStore(pool, owner=owner)
+            self.v_store = PooledStore(pool, owner=owner)
+        else:
+            store_kw = dict(n_iters=pkv.n_iters, damping=pkv.damping,
+                            mesh=pkv.mesh)
+            self.k_store = PagedProtectedStore(code, page_words=wpu,
+                                               **store_kw)
+            self.v_store = PagedProtectedStore(code, page_words=wpu,
+                                               **store_kw)
         self.words_per_page = wpu
+        self._inject_key = jax.random.PRNGKey(0)
+        self._injections = 0
         self.hot_k = jnp.zeros(self.page_shape, dtype)
         self.hot_v = jnp.zeros(self.page_shape, dtype)
         self.hot_len = 0
@@ -134,11 +159,32 @@ class ProtectedKVLayer:
 
     def inject(self, channel, key=None, **kw) -> int:
         """Corrupt both stores through a channel model; invalidates the
-        decoded view so the next read goes through the decoder."""
-        changed = self.k_store.inject(channel, key, **kw)
-        changed += self.v_store.inject(channel, key, **kw)
+        decoded view so the next read goes through the decoder. The K and V
+        stores draw from independent halves of the key (with no key, from a
+        per-layer counter), so the two stores never see identical error
+        patterns."""
+        if key is None:
+            key = jax.random.fold_in(self._inject_key, self._injections)
+        elif isinstance(key, int):
+            key = jax.random.PRNGKey(key)
+        self._injections += 1
+        kk, vk = jax.random.split(key)
+        changed = self.k_store.inject(channel, kk, **kw)
+        changed += self.v_store.inject(channel, vk, **kw)
         self.invalidate()
         return changed
+
+    def free(self) -> None:
+        """Release the stores (pool-backed layers return every block to the
+        shared free list) and reset the hot page."""
+        self.k_store.free()
+        self.v_store.free()
+        self.hot_k = jnp.zeros(self.page_shape, self.dtype)
+        self.hot_v = jnp.zeros(self.page_shape, self.dtype)
+        self.hot_len = 0
+        self.n_frozen = 0
+        self._metas = []
+        self._decoded = None
 
     def _refill_iter(self):
         """Decode + dequantize the frozen pages, one at a time.
@@ -153,7 +199,8 @@ class ProtectedKVLayer:
         p = self.k_store.code.p
         kcode = self.k_store.code.k
         if not self.pkv.corrected:
-            pages = zip(self.k_store._pages, self.v_store._pages)
+            pages = zip(self.k_store._iter_pages(),
+                        self.v_store._iter_pages())
         elif self.pkv.overlap:
             pages = zip(self.k_store.iter_corrected(depth=1),
                         self.v_store.iter_corrected(depth=1))
@@ -195,11 +242,15 @@ class ProtectedKVLayer:
     # -- stats --------------------------------------------------------------
 
     def stats(self) -> dict:
+        ks, vs = self.k_store.stats, self.v_store.stats
         return {"tokens": self.n_tokens, "frozen_pages": len(self._metas),
                 "stored_words": self.k_store.n_words + self.v_store.n_words,
                 "stored_cells": self.k_store.n_cells + self.v_store.n_cells,
                 "flagged_words": int(self.k_store.scan_flags().sum()
-                                     + self.v_store.scan_flags().sum())}
+                                     + self.v_store.scan_flags().sum()),
+                "detected": ks.detected + vs.detected,
+                "corrected": ks.corrected + vs.corrected,
+                "uncorrectable": ks.uncorrectable + vs.uncorrectable}
 
 
 class ProtectedKVCaches:
@@ -210,10 +261,11 @@ class ProtectedKVCaches:
     code is identical for protected and dense serving."""
 
     def __init__(self, cfg: ArchConfig, pkv: ProtectedKVConfig, batch: int,
-                 max_seq: int):
+                 max_seq: int, owner: Any = None):
         from .lm import _block_cache                     # lazy: avoid cycle
         self.cfg, self.pkv = cfg, pkv
         self.batch, self.max_seq = batch, max_seq
+        self.owner = owner
         n_aux = cfg.n_aux_tokens or 1
         self.layers: Dict[Tuple[int, int], ProtectedKVLayer] = {}
         self.dense: Dict[Tuple[int, int], dict] = {}
@@ -221,10 +273,13 @@ class ProtectedKVCaches:
             for i, spec in enumerate(cfg.group_spec):
                 if self._protectable(spec):
                     self.layers[(g, i)] = ProtectedKVLayer(
-                        pkv, batch, cfg.n_kv_heads, cfg.head_dim)
+                        pkv, batch, cfg.n_kv_heads, cfg.head_dim,
+                        owner=owner)
                 else:
                     self.dense[(g, i)] = _block_cache(spec, cfg, batch,
                                                       max_seq, n_aux)
+        self._inject_key = jax.random.PRNGKey(0)
+        self._injections = 0
 
     @staticmethod
     def _protectable(spec) -> bool:
@@ -270,15 +325,30 @@ class ProtectedKVCaches:
 
     # -- maintenance / stats ------------------------------------------------
 
-    def inject(self, channel, key: int = 0, **kw) -> int:
-        """Corrupt every protected layer's stores (distinct subkeys) and
-        invalidate their decoded views."""
-        base = jax.random.PRNGKey(key) if isinstance(key, int) else key
+    def inject(self, channel, key: Optional[Any] = None, **kw) -> int:
+        """Corrupt every protected layer's stores and invalidate their
+        decoded views. Each layer draws an independent fold_in-derived
+        subkey (and splits it again for K vs V inside the layer), so no two
+        layers — and no two repeated default-key injections — ever see the
+        same error pattern."""
+        if key is None:
+            base = jax.random.fold_in(self._inject_key, self._injections)
+        elif isinstance(key, int):
+            base = jax.random.PRNGKey(key)
+        else:
+            base = key
+        self._injections += 1
         changed = 0
         for j, layer in enumerate(sorted(self.layers)):
             changed += self.layers[layer].inject(
                 channel, jax.random.fold_in(base, j), **kw)
         return changed
+
+    def free(self) -> None:
+        """Release every protected layer's storage (pool-backed layers
+        return their blocks to the shared pool)."""
+        for layer in self.layers.values():
+            layer.free()
 
     def invalidate(self) -> None:
         for layer in self.layers.values():

@@ -432,12 +432,16 @@ def _decode_step_protected(params, cfg: ArchConfig, caches, token, pos, *,
     unrolled in Python (paged stores are host-managed objects, not scan
     carries); each protected attention layer appends the token's K/V into
     its paged store and reads through the overlap-decode pipeline. Dense
-    entries (mamba / cross / sliding-window) update in the manager."""
+    entries (mamba / cross / sliding-window) update in the manager.
+
+    `pos` is a () scalar (every row at the same position) or a (B,) vector
+    (the multi-tenant serving engine: ragged per-slot positions)."""
     B = token.shape[0]
     x = jnp.take(params["embed"], token, axis=0).astype(CDT)
     if cfg.embed_scale:
         x = x * jnp.asarray(cfg.d_model ** 0.5, CDT)
-    positions = jnp.full((B, 1), pos, jnp.int32)
+    positions = jnp.broadcast_to(
+        jnp.reshape(jnp.asarray(pos, jnp.int32), (-1, 1)), (B, 1))
     for g in range(cfg.n_groups):
         gp = jax.tree.map(lambda t: t[g], params["groups"])
         for i, spec in enumerate(cfg.group_spec):
@@ -453,11 +457,15 @@ def decode_step(params, cfg: ArchConfig, caches, token, pos, *, aux=None,
                 pim_ctx=None):
     """One-token decode. token: (B, 1) int32; pos: () int32 current position.
     caches: stacked pytree from init_caches (cross entries must be filled by
-    prefill, or `aux` provided to compute them on the fly), or the
-    `ProtectedKVCaches` manager from `init_caches(..., protected_kv=...)`.
+    prefill, or `aux` provided to compute them on the fly), the
+    `ProtectedKVCaches` manager from `init_caches(..., protected_kv=...)`,
+    or any manager exposing the same view/update surface with
+    `is_protected_manager = True` (the serving engine's batched caches,
+    which also accept a (B,) per-slot `pos`).
     Returns (logits (B, 1, V), new_caches)."""
     from .kv import ProtectedKVCaches
-    if isinstance(caches, ProtectedKVCaches):
+    if (isinstance(caches, ProtectedKVCaches)
+            or getattr(caches, "is_protected_manager", False)):
         return _decode_step_protected(params, cfg, caches, token, pos,
                                       aux=aux, pim_ctx=pim_ctx)
     B = token.shape[0]

@@ -133,17 +133,20 @@ def _attend(q, k, v, mask, softcap, *, impl="naive", causal=True, window=0):
 @functools.partial(jax.jit, static_argnames=("softcap",))
 def _paged_attn_update(q, kpg, vpg, valid, m, l, acc, softcap=0.0):
     """One online-softmax step over a KV page (flash-attention recurrence,
-    page-granular). q: (B,Sq,Hq,D); kpg/vpg: (B,T,Hkv,D); valid: () int32 —
-    tokens of the page that are real (pad slots masked). Carries
-    (m, l, acc) in fp32; fixed page shapes mean ONE cached executable
-    serves every page of a layer."""
+    page-granular). q: (B,Sq,Hq,D); kpg/vpg: (B,T,Hkv,D); valid: () or (B,)
+    int32 — tokens of the page that are real per sequence (pad slots
+    masked; a (B,) valid is the multi-tenant batched-slot path, where
+    ragged sequences share one executable). Carries (m, l, acc) in fp32;
+    fixed page shapes mean ONE cached executable serves every page of a
+    layer."""
     B, Sq, Hq, D = q.shape
     T, Hkv = kpg.shape[1], kpg.shape[2]
     G = Hq // Hkv
     qg = q.reshape(B, Sq, Hkv, G, D)
     logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kpg).astype(jnp.float32)
     logits = _softcap(logits / jnp.sqrt(D).astype(jnp.float32), softcap)
-    ok = jnp.arange(T)[None, None, None, None, :] < valid
+    ok = (jnp.arange(T)[None, None, None, None, :]
+          < jnp.reshape(valid, (-1, 1, 1, 1, 1)))
     logits = jnp.where(ok, logits, -1e30)
     pm = logits.max(axis=-1, keepdims=True)          # (B,Hkv,G,Sq,1)
     new_m = jnp.maximum(m, pm)

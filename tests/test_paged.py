@@ -342,3 +342,57 @@ def test_protected_kv_serving_corrects_corruption(tiny_lm):
     rep = pc.scrub()
     assert rep["repaired_words"] == rep["flagged_words"] > 0
     assert pc.stats()["flagged_words"] == 0
+
+
+def _store_levels(store):
+    return np.concatenate([np.asarray(pg) for pg in store._iter_pages()])
+
+
+def test_kv_inject_keys_independent_per_layer_and_store(tiny_lm):
+    """Regression: `ProtectedKVCaches.inject` must derive an independent
+    subkey per layer (fold_in) and per K/V store (split) — one shared key
+    used to corrupt every store with the same pattern, which understates
+    multi-layer corruption."""
+    import itertools
+    from repro.models import ProtectedKVConfig, prefill
+    cfg, params = tiny_lm
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0,
+                              cfg.vocab_size)
+    pkv = ProtectedKVConfig(code_name="wl80_r08", page_tokens=4)
+    _lg, pc = prefill(params, cfg, toks, protected_kv=pkv, max_seq=16)
+    assert len(pc.layers) >= 2
+    clean = {name: (_store_levels(lyr.k_store), _store_levels(lyr.v_store))
+             for name, lyr in pc.layers.items()}
+    ch = asymmetric_adjacent(3, 0.02, 0.02)
+    assert pc.inject(ch, key=7) > 0
+    masks = {}
+    for name, lyr in pc.layers.items():
+        km = _store_levels(lyr.k_store) != clean[name][0]
+        vm = _store_levels(lyr.v_store) != clean[name][1]
+        assert km.any() and vm.any()       # every layer was actually hit
+        assert not np.array_equal(km, vm)  # K and V draw split halves
+        masks[name] = (km, vm)
+    for a, b in itertools.combinations(sorted(masks), 2):
+        assert not np.array_equal(masks[a][0], masks[b][0])
+        assert not np.array_equal(masks[a][1], masks[b][1])
+
+
+def test_kv_inject_counter_advances_without_key(tiny_lm):
+    """Keyless injections draw fresh fold_in subkeys each call — two
+    consecutive injections never repeat an error pattern."""
+    from repro.models import ProtectedKVConfig, prefill
+    cfg, params = tiny_lm
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0,
+                              cfg.vocab_size)
+    pkv = ProtectedKVConfig(code_name="wl80_r08", page_tokens=4)
+    _lg, pc = prefill(params, cfg, toks, protected_kv=pkv, max_seq=16)
+    lyr = pc.layers[sorted(pc.layers)[0]]
+    ch = asymmetric_adjacent(3, 0.02, 0.02)
+    s0 = _store_levels(lyr.k_store)
+    assert pc.inject(ch) > 0
+    s1 = _store_levels(lyr.k_store)
+    assert pc.inject(ch) > 0
+    s2 = _store_levels(lyr.k_store)
+    m1, m2 = s1 != s0, s2 != s1
+    assert m1.any() and m2.any()
+    assert not np.array_equal(m1, m2)

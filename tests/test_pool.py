@@ -1,0 +1,193 @@
+"""Shared protected page pool: allocator, refcounts/aliasing, copy-on-write,
+exhaustion, and scrub attribution (`repro.memory.pool`)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import get_code
+from repro.memory import (PoolExhausted, PooledStore, ProtectedPagePool,
+                          asymmetric_adjacent)
+from repro.memory.paged import PagedProtectedStore
+
+CODE = "wl160_r08"
+
+
+def _pool(capacity=8, page_words=6, **kw):
+    return ProtectedPagePool(CODE, page_words=page_words,
+                             capacity_pages=capacity, n_iters=8, **kw)
+
+
+def _words(rng, m, k=None, p=None):
+    code = get_code(CODE)
+    return jnp.asarray(rng.integers(0, p or code.p, (m, k or code.k)),
+                       jnp.int32)
+
+
+# -- allocator / refcount ----------------------------------------------------
+
+
+def test_alloc_free_cycle(rng):
+    pool = _pool(capacity=3)
+    a, b = pool.alloc("t0"), pool.alloc("t1")
+    assert pool.n_allocated == 2 and pool.available == 1
+    assert pool.owner(a) == "t0" and pool.refcount(b) == 1
+    pool.free(a)
+    assert pool.available == 2
+    with pytest.raises(ValueError):
+        pool.page(a)                       # freed page is inaccessible
+    c = pool.alloc("t2")
+    assert pool.n_allocated == 2
+    assert int(jnp.sum(pool.page(c))) == 0  # realloc hands out a zeroed page
+    pool.free(b), pool.free(c)
+    assert pool.available == 3
+
+
+def test_free_never_reclaims_live_refs(rng):
+    """A page freed by one alias must stay live (and untouched) for the
+    other holder — the free list never hands out a page with refs."""
+    pool = _pool(capacity=2)
+    pid = pool.alloc("a")
+    marker = jnp.full((pool.page_words, pool.code.n), 2, jnp.int32)
+    pool.set_page(pid, marker)
+    pool.ref(pid)                          # second holder
+    pool.free(pid)                         # first holder drops out
+    assert pool.refcount(pid) == 1
+    other = pool.alloc("b")                # must come from the free list
+    assert other != pid
+    assert np.array_equal(np.asarray(pool.page(pid)), np.asarray(marker))
+    pool.free(pid)
+    with pytest.raises(ValueError):
+        pool.free(pid)                     # double free is a clean error
+
+
+def test_exhaustion_is_clean():
+    pool = _pool(capacity=2)
+    pool.alloc(), pool.alloc()
+    with pytest.raises(PoolExhausted):
+        pool.alloc()
+    assert pool.n_allocated == 2           # failed alloc mutated nothing
+    assert pool.available == 0
+
+
+# -- pooled store: block tables, CoW, fork -----------------------------------
+
+
+def test_pooled_store_matches_standalone(rng):
+    """The pool-backed store is storage-indirection only: reads round-trip
+    identically to a private PagedProtectedStore."""
+    pool = _pool(capacity=8)
+    st = PooledStore(pool, owner="t0")
+    u = _words(rng, 15)
+    st.append_words(u)
+    assert st.n_pages == 3 and pool.n_allocated == 3
+    ref = PagedProtectedStore(CODE, page_words=pool.page_words, n_iters=8)
+    ref.append_words(u)
+    # identical codewords to a private store, and info columns round-trip
+    assert np.array_equal(np.asarray(st.export_words()),
+                          np.asarray(ref.export_words()))
+    back = st.read_info(0, 15)
+    assert np.array_equal(np.asarray(back), np.asarray(u))
+    st.free()
+    assert st.n_pages == 0 and pool.available == 8
+
+
+def test_fork_aliases_then_cow(rng):
+    pool = _pool(capacity=8)
+    st = PooledStore(pool, owner="a")
+    st.append_words(_words(rng, 12))       # 2 full pages
+    clone = st.fork(owner="b")
+    assert clone.block_table == st.block_table
+    assert pool.n_allocated == 2           # aliased, nothing copied
+    assert all(pool.refcount(pid) == 2 for pid in st.block_table)
+    before = np.asarray(st.page(0)).copy()
+    # writing through the clone copies; the original never sees it
+    clone._pages[0] = jnp.zeros_like(clone.page(0))
+    assert clone.block_table[0] != st.block_table[0]
+    assert pool.n_allocated == 3
+    assert pool.refcount(st.block_table[0]) == 1
+    assert np.array_equal(np.asarray(st.page(0)), before)
+    clone.free()
+    assert pool.n_allocated == 2           # copy + alias refs returned
+    st.free()
+    assert pool.available == 8
+
+
+def test_append_exhaustion_preserves_block_table(rng):
+    pool = _pool(capacity=2)
+    st = PooledStore(pool, owner="a")
+    u = _words(rng, 12)
+    st.append_words(u)                     # fills the pool (2 pages)
+    table = list(st.block_table)
+    n_words = st.n_words
+    with pytest.raises(PoolExhausted):
+        st.append_words(_words(rng, 7))    # needs a 3rd page
+    # the failed append mutated neither the table, the count, nor the data
+    assert st.block_table == table and st.n_words == n_words
+    assert np.array_equal(np.asarray(st.read_info(0, 12)), np.asarray(u))
+    st.free()
+
+
+def test_pages_needed_counts_cow_tail(rng):
+    pool = _pool(capacity=8)
+    st = PooledStore(pool, owner="a")
+    st.append_words(_words(rng, 8))        # 1 full + 1 partial page
+    assert st.pages_needed(4) == 0         # fits in the tail page
+    assert st.pages_needed(5) == 1
+    clone = st.fork(owner="b")
+    # the aliased partial tail must CoW before it can take more words
+    assert clone.pages_needed(1) == 1
+    assert clone.pages_needed(5) == 2
+    clone.free(), st.free()
+
+
+# -- injection + scrub attribution -------------------------------------------
+
+
+def test_inject_scopes_to_owner_and_scrub_attributes(rng):
+    pool = _pool(capacity=8, page_words=4)
+    a = PooledStore(pool, owner="a")
+    b = PooledStore(pool, owner="b")
+    a.append_words(_words(rng, 8))
+    b.append_words(_words(rng, 8))
+    ch = asymmetric_adjacent(pool.code.p, 2e-3, 1e-3)
+    changed = pool.inject(ch, key=0, owners=["a"])
+    assert changed > 0
+    clean_b = [np.asarray(pg).copy() for pg in b._iter_pages()]
+    rep = pool.scrub(max_pages=pool.capacity_pages)
+    assert rep["flagged_words"] > 0 and rep["repaired_words"] > 0
+    assert set(rep["by_owner"]) == {"a"}   # only a's pages were dirty
+    # b's storage was swept but untouched
+    for got, want in zip(b._iter_pages(), clean_b):
+        assert np.array_equal(np.asarray(got), want)
+    # repairs stick: a second sweep flags only what the first could not fix
+    rep2 = pool.scrub(max_pages=pool.capacity_pages)
+    assert rep2["flagged_words"] == (rep["flagged_words"]
+                                     - rep["repaired_words"])
+    assert pool.scrub_by_owner["a"]["repaired_words"] > 0
+    a.free(), b.free()
+
+
+def test_scrub_round_robin_budget(rng):
+    pool = _pool(capacity=8, page_words=4)
+    st = PooledStore(pool, owner="a")
+    st.append_words(_words(rng, 24))       # 6 pages
+    seen = set()
+    for _ in range(3):
+        pool.scrub(max_pages=2)
+        seen.add(pool._scrub_cursor)
+    assert len(seen) == 3                  # cursor advances across calls
+    assert pool.stats.scrub_rounds == 3
+    assert pool.stats.scrub_words == 6 * 4
+    st.free()
+
+
+def test_scrub_min_age_skips_hot_pages(rng):
+    pool = _pool(capacity=4, page_words=4)
+    st = PooledStore(pool, owner="a")
+    st.append_words(_words(rng, 8))        # 2 pages
+    pool.touch(st.block_table[0], 10)      # hot
+    pool.touch(st.block_table[1], 0)       # cold
+    rep = pool.scrub(now=11, min_age=5)
+    assert rep["pages"] == 1
+    st.free()

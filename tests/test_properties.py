@@ -1,0 +1,110 @@
+"""Property-based round-trip tests for the packing and quantization bridges
+(`repro.memory.packing`, `repro.memory.paged`), via the `_hyp` shim: real
+hypothesis when installed, a deterministic sample grid otherwise.
+
+Every code in the registry is exercised (the bridges only depend on (p, k),
+so the registry tuples are used directly — no parity matrices get built)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp import given, settings, st
+
+from repro.core.codes import REGISTRY
+from repro.memory.packing import (desymbolize_bytes, desymbolize_u8,
+                                  digits_per_byte, symbolize_bytes,
+                                  symbolize_u8)
+from repro.memory.paged import (dequantize_tensor, quantize_tensor,
+                                words_for_tensor)
+
+ALPHABETS = sorted({p for (_n, _k, p, _dv) in REGISTRY.values()})
+DTYPES = ["float32", "bfloat16", "float16"]
+
+
+def _rand_shape(rng, max_rank=3, max_dim=7):
+    rank = int(rng.integers(0, max_rank + 1))
+    return tuple(int(rng.integers(1, max_dim + 1)) for _ in range(rank))
+
+
+@pytest.mark.parametrize("p", ALPHABETS)
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=0, max_value=10**6))
+def test_symbolize_bytes_roundtrip(p, seed):
+    rng = np.random.default_rng(seed)
+    nbytes = int(rng.integers(0, 300))
+    raw = rng.integers(0, 256, nbytes, dtype=np.uint8).tobytes()
+    syms = symbolize_bytes(raw, p)
+    assert syms.shape == (nbytes * digits_per_byte(p),)
+    assert syms.min(initial=0) >= 0 and syms.max(initial=0) < p
+    assert desymbolize_bytes(syms, nbytes, p) == raw
+
+
+@pytest.mark.parametrize("p", ALPHABETS)
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=0, max_value=10**6))
+def test_symbolize_u8_roundtrip_and_host_interop(p, seed):
+    rng = np.random.default_rng(seed)
+    shape = _rand_shape(rng)
+    vals = rng.integers(0, 256, shape)
+    dev = symbolize_u8(jnp.asarray(vals), p)
+    assert dev.shape == shape + (digits_per_byte(p),)
+    assert np.array_equal(np.asarray(desymbolize_u8(dev, p)), vals)
+    # device digits match the host pair byte-for-byte (checkpoint interop)
+    host = symbolize_bytes(vals.reshape(-1).astype(np.uint8), p)
+    assert np.array_equal(np.asarray(dev).reshape(-1), host)
+
+
+@pytest.mark.parametrize("p", ALPHABETS)
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=0, max_value=10**6))
+def test_desymbolize_degrades_never_crashes(p, seed):
+    rng = np.random.default_rng(seed)
+    shape = _rand_shape(rng) + (digits_per_byte(p),)
+    junk = rng.integers(-3, p + 4, shape)          # digits outside the field
+    out = np.asarray(desymbolize_u8(jnp.asarray(junk), p))
+    assert out.min(initial=0) >= 0 and out.max(initial=0) < 256
+
+
+@pytest.mark.parametrize("code_name", sorted(REGISTRY))
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=10**6),
+       st.sampled_from(DTYPES))
+def test_quantize_dequantize_roundtrip(code_name, seed, dtype):
+    _n, k, p, _dv = REGISTRY[code_name]
+    rng = np.random.default_rng(seed)
+    shape = _rand_shape(rng)
+    x = jnp.asarray(
+        rng.standard_normal(shape) * 10.0 ** int(rng.integers(-2, 3)),
+        dtype=dtype)
+    words, meta = quantize_tensor(x, p, k)
+    m = words_for_tensor(shape, p, k)
+    assert words.shape == (m, k) and meta.n_words == m
+    w = np.asarray(words)
+    assert w.min(initial=0) >= 0 and w.max(initial=0) < p
+    y = dequantize_tensor(words, meta, p)
+    assert y.shape == x.shape and y.dtype == x.dtype
+    # absmax-int8: elementwise error bounded by half a quantization step
+    # (plus the output dtype's own rounding)
+    err = np.abs(np.asarray(y, np.float32) - np.asarray(x, np.float32))
+    step = float(meta.scale)
+    tol = 0.5 * step + np.spacing(np.float32(step * 127), dtype=np.float32)
+    if dtype != "float32":
+        tol += np.abs(np.asarray(x, np.float32)).max(initial=0) * 2 ** -7
+    assert err.max(initial=0.0) <= tol
+
+
+@pytest.mark.parametrize("code_name", sorted(REGISTRY))
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=10**6))
+def test_quantize_fixed_point(code_name, seed):
+    """Requantizing a dequantized float32 tensor reproduces the exact same
+    info words — the lattice is a fixed point, so freeze -> decode ->
+    refreeze cycles (preemption replay) cannot drift."""
+    _n, k, p, _dv = REGISTRY[code_name]
+    rng = np.random.default_rng(seed)
+    shape = _rand_shape(rng)
+    x = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+    words, meta = quantize_tensor(x, p, k)
+    y = dequantize_tensor(words, meta, p)
+    words2, meta2 = quantize_tensor(y, p, k)
+    assert np.array_equal(np.asarray(words), np.asarray(words2))
+    assert np.isclose(float(meta.scale), float(meta2.scale), rtol=1e-6)

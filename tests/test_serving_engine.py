@@ -1,0 +1,192 @@
+"""Multi-tenant serving engine (`repro.serving.engine`): continuous
+batching, bit-exactness across occupancy, mid-serving fault injection with
+per-tenant attribution, preemption/readmission, background scrub."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import get_code
+from repro.memory import (Compose, LevelTransition, PoolExhausted,
+                          ProtectedPagePool, ReadDisturb,
+                          asymmetric_adjacent)
+from repro.memory.paged import words_for_tensor
+from repro.models import ProtectedKVConfig, init_params
+from repro.serving import ServingEngine
+
+CODE = "wl160_r08"
+PAGE_TOKENS = 8
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_config("paper_pim").reduced(n_groups=2, d_model=32,
+                                          n_heads=2, d_ff=64, vocab=128)
+    params = jax.tree.map(lambda t: t * 3.0,
+                          init_params(jax.random.PRNGKey(0), cfg))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, 12) for _ in range(4)]
+    return cfg, params, prompts
+
+
+def _pool(cfg, capacity):
+    code = get_code(CODE)
+    wpu = words_for_tensor((1, PAGE_TOKENS, cfg.n_kv_heads, cfg.head_dim),
+                           code.p, code.k)
+    return ProtectedPagePool(code, page_words=wpu, capacity_pages=capacity,
+                             n_iters=8)
+
+
+def _engine(cfg, params, pool, **kw):
+    pkv = ProtectedKVConfig(code_name=CODE, page_tokens=PAGE_TOKENS,
+                            n_iters=8)
+    kw.setdefault("max_active", 4)
+    kw.setdefault("max_seq", 48)
+    return ServingEngine(params, cfg, pkv=pkv, pool=pool, **kw)
+
+
+def _serve(eng, prompts, gen=8):
+    for t, p in enumerate(prompts):
+        eng.submit(t, p, max_new=gen)
+    return eng.run()
+
+
+def _mixed_channel(p, eps):
+    # level drift + read disturb, composed — the stress mix from the issue
+    drift = asymmetric_adjacent(p, eps, eps / 2)
+    return Compose(LevelTransition(drift.T), ReadDisturb(p, eps / 2))
+
+
+def test_engine_smoke_and_pool_drains(tiny):
+    cfg, params, prompts = tiny
+    pool = _pool(cfg, 256)
+    eng = _engine(cfg, params, pool)
+    out = _serve(eng, prompts)
+    assert sorted(out) == [0, 1, 2, 3]
+    assert all(len(v) == 8 for v in out.values())
+    st = eng.stats()
+    assert st["done"] == 4 and st["active"] == 0 and st["waiting"] == 0
+    # every retired slot returned its blocks to the shared free list
+    assert pool.n_allocated == 0 and pool.available == 256
+
+
+def test_single_vs_multi_tenant_bit_exact(tiny):
+    cfg, params, prompts = tiny
+    pool = _pool(cfg, 256)
+    multi = _serve(_engine(cfg, params, pool), prompts)
+    for t, p in enumerate(prompts):
+        solo = _serve(_engine(cfg, params, pool), [p])
+        assert solo[0] == multi[t], f"tenant {t} diverged under batching"
+
+
+def test_injection_mid_serving_corrected_and_attributed(tiny):
+    """Satellite stress: corrupt the shared pool mid-serving across 4
+    tenants through a composed LevelTransition+ReadDisturb channel; every
+    tenant's output must match its clean run, and the corrections must land
+    in the right tenant's accounting."""
+    cfg, params, prompts = tiny
+    pool = _pool(cfg, 256)
+    clean = _serve(_engine(cfg, params, pool), prompts)
+
+    eng = _engine(cfg, params, pool)
+    for t, p in enumerate(prompts):
+        eng.submit(t, p, max_new=8)
+    ch = _mixed_channel(pool.code.p, 2e-4)
+    steps = changed = 0
+    while eng.waiting or any(s is not None for s in eng.slots):
+        eng.step()
+        if steps == 2:
+            changed = eng.inject(ch, key=11, n_reads=2)
+        steps += 1
+    assert changed > 0
+    out = {s.tenant: list(s.generated) for s in eng.sequences}
+    assert out == clean
+    per_tenant = {t: eng.tenant_stats(t) for t in range(4)}
+    assert sum(s["detected"] for s in per_tenant.values()) > 0
+    assert all(s["uncorrectable"] == 0 for s in per_tenant.values())
+    assert all(s["corrected"] == s["detected"]
+               for s in per_tenant.values())
+
+
+def test_injection_scoped_to_tenants(tiny):
+    """`inject(..., tenants=[...])` corrupts only the named tenants' pages;
+    the others read clean storage and bank zero corrections."""
+    cfg, params, prompts = tiny
+    pool = _pool(cfg, 256)
+    eng = _engine(cfg, params, pool)
+    for t, p in enumerate(prompts):
+        eng.submit(t, p, max_new=8)
+    ch = _mixed_channel(pool.code.p, 5e-3)
+    steps = 0
+    while eng.waiting or any(s is not None for s in eng.slots):
+        eng.step()
+        if steps == 1:
+            assert eng.inject(ch, key=3, n_reads=2, tenants=[0, 1]) > 0
+        steps += 1
+    hit = [eng.tenant_stats(t)["detected"] for t in range(4)]
+    assert hit[0] > 0 and hit[1] > 0
+    assert hit[2] == 0 and hit[3] == 0
+
+
+@pytest.mark.slow
+def test_preemption_and_resume_bit_exact(tiny):
+    """A pool too small for 4 resident tenants forces LIFO preemption;
+    evicted sequences readmit (re-prefill + teacher-forced replay) and
+    still finish bit-exactly."""
+    cfg, params, prompts = tiny
+    big = _pool(cfg, 256)
+    clean = _serve(_engine(cfg, params, big), prompts)
+    small = _pool(cfg, 24)
+    eng = _engine(cfg, params, small)
+    out = _serve(eng, prompts)
+    assert eng.stats()["preemptions"] > 0
+    assert out == clean
+    assert small.n_allocated == 0      # eviction/retire freed every block
+
+
+def test_pool_exhaustion_is_clean_error(tiny):
+    cfg, params, prompts = tiny
+    pool = _pool(cfg, 4)               # can't hold even one sequence
+    eng = _engine(cfg, params, pool)
+    eng.submit(0, prompts[0], max_new=8)
+    with pytest.raises(PoolExhausted):
+        eng.run()
+
+
+def test_submit_validates_against_max_seq(tiny):
+    cfg, params, prompts = tiny
+    eng = _engine(cfg, params, _pool(cfg, 64), max_seq=16)
+    with pytest.raises(ValueError):
+        eng.submit(0, prompts[0], max_new=8)   # 12 + 8 > 16
+
+
+@pytest.mark.slow
+def test_background_scrub_preserves_outputs_and_repairs(tiny):
+    """Interleaved scrub sweeps must not change any tenant's tokens, and
+    must actually repair the injected corruption in place."""
+    cfg, params, prompts = tiny
+    pool = _pool(cfg, 256)
+
+    def noisy_run(scrub_every):
+        eng = _engine(cfg, params, pool, scrub_every=scrub_every,
+                      scrub_max_pages=8)
+        for t, p in enumerate(prompts):
+            eng.submit(t, p, max_new=8)
+        ch = _mixed_channel(pool.code.p, 2e-4)
+        steps = 0
+        while eng.waiting or any(s is not None for s in eng.slots):
+            eng.step()
+            if steps == 1:
+                eng.inject(ch, key=9, n_reads=2)
+            steps += 1
+        return {s.tenant: list(s.generated) for s in eng.sequences}, eng
+
+    base, _ = noisy_run(0)
+    scrubbed, eng = noisy_run(2)
+    assert scrubbed == base
+    assert pool.stats.scrub_rounds > 0
+    reports = eng.scrub_reports
+    assert sum(r["pages"] for r in reports) > 0
+    repaired = sum(r["repaired_words"] for r in reports)
+    flagged = sum(r["flagged_words"] for r in reports)
+    assert repaired == flagged         # weak channel: everything repairable

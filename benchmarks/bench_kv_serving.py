@@ -32,6 +32,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.core import get_code, np_encode_words
 from repro.core.codes import REGISTRY
+from repro.kernels.backend import policy_from_store_backend
 from repro.memory import PagedProtectedStore, asymmetric_adjacent
 from repro.models import (ProtectedKVConfig, decode_step, init_caches,
                           init_params, prefill)
@@ -56,7 +57,7 @@ def _parity_rows(n_words: int = 24, seed: int = 0):
         host = np_encode_words(u, code)
         for backend in ("kernel", "ref"):
             st = PagedProtectedStore(code, page_words=max(8, n_words // 2),
-                                     backend=backend)
+                                     policy=policy_from_store_backend(backend))
             st.append_words(u)
             dev = st.export_words().astype(np.int64)
             ok = np.array_equal(dev, host)
@@ -172,15 +173,36 @@ def _throughput_rows(quick: bool, code_name: str):
     jax.block_until_ready(lgj)
     tps_dense_jit = toks / (time.perf_counter() - t0)
 
-    # protected paged store (clean storage: scan-gated fast path)
+    # protected paged store, fused one-kernel read path (the default:
+    # corrected GF pages + scales straight into ops.attend_protected)
     pkv = ProtectedKVConfig(code_name=code_name, page_tokens=page_tokens)
     _lg, pc = prefill(params, cfg, prompts, protected_kv=pkv,
                       max_seq=max_seq)
-    _serve(params, cfg, pc, prompts, cont[:, :2])          # warm executables
+    # warm over the FULL continuation: the fused read compiles one
+    # executable per page-count bucket, and the larger buckets only
+    # appear late in generation — a short warmup would bill their
+    # compiles to the timed run
+    _serve(params, cfg, pc, prompts, cont)
     _lg, pc = prefill(params, cfg, prompts, protected_kv=pkv,
                       max_seq=max_seq)
-    _nll, dt_prot, toks, _f = _serve(params, cfg, pc, prompts, cont)
+    nll_f, dt_prot, toks, first_f = _serve(params, cfg, pc, prompts, cont)
     tps_prot = toks / dt_prot
+
+    # unfused streaming ablation (per-page decode -> dequant -> jitted
+    # online-softmax update): the exact-parity reference the fused kernel
+    # must match bitwise AND beat on tokens/s
+    pkv_u = ProtectedKVConfig(code_name=code_name, page_tokens=page_tokens,
+                              fused=False)
+    _lg, pcu = prefill(params, cfg, prompts, protected_kv=pkv_u,
+                       max_seq=max_seq)
+    _serve(params, cfg, pcu, prompts, cont)                # warm executables
+    _lg, pcu = prefill(params, cfg, prompts, protected_kv=pkv_u,
+                       max_seq=max_seq)
+    nll_u, dt_unf, toks, first_u = _serve(params, cfg, pcu, prompts, cont)
+    tps_unfused = toks / dt_unf
+    fused_bitexact = bool(
+        np.array_equal(np.asarray(first_f), np.asarray(first_u))
+        and nll_f == nll_u)
 
     rows.append({"section": "throughput", "code": code_name,
                  "batch": B, "prompt": S, "gen": cont.shape[1],
@@ -189,6 +211,12 @@ def _throughput_rows(quick: bool, code_name: str):
                  "tokens_per_s_protected": round(tps_prot, 2),
                  "protected_slowdown": round(tps_dense / tps_prot, 3),
                  "kv_stats": pc.stats()})
+    rows.append({"section": "fused", "code": code_name,
+                 "batch": B, "prompt": S, "gen": cont.shape[1],
+                 "tokens_per_s_fused": round(tps_prot, 2),
+                 "tokens_per_s_unfused": round(tps_unfused, 2),
+                 "fused_speedup": round(tps_prot / tps_unfused, 3),
+                 "fused_bitexact": fused_bitexact})
 
     # decode-overlap ablation: refill the corrupted cache (first decode step
     # after injection pays the decode) via the scan-gated double-buffered
@@ -198,8 +226,12 @@ def _throughput_rows(quick: bool, code_name: str):
     ch = asymmetric_adjacent(get_code(code_name).p, 5e-5, 5e-5)
     lat = {}
     for mode, overlap in (("overlap", True), ("sync", False)):
+        # fused=False: the overlap knob ablates the STREAMING refill
+        # pipeline (decode of page i+1 overlapping attention on page i);
+        # the fused path has no per-page consumer to overlap with
         pkv_m = ProtectedKVConfig(code_name=code_name,
-                                  page_tokens=page_tokens, overlap=overlap)
+                                  page_tokens=page_tokens, overlap=overlap,
+                                  fused=False)
         _lg, pcm = prefill(params, cfg, prompts, protected_kv=pkv_m,
                            max_seq=max_seq)
         # warm EVERY store's scan + decode executable before timing (a
@@ -226,7 +258,7 @@ def _throughput_rows(quick: bool, code_name: str):
                  "refill_s_overlap": round(lat["overlap"], 4),
                  "refill_s_sync": round(lat["sync"], 4),
                  "overlap_speedup": round(lat["sync"] / lat["overlap"], 3)})
-    return rows, (tps_dense, tps_prot, lat)
+    return rows, (tps_dense, tps_prot, tps_unfused, fused_bitexact, lat)
 
 
 def _quality_rows(quick: bool, code_name: str, raw_bers):
@@ -278,7 +310,8 @@ def _quality_rows(quick: bool, code_name: str, raw_bers):
 def main(quick: bool = False):
     code_name = "wl160_r08"
     rows = _parity_rows(n_words=16 if quick else 48)
-    tput, (tps_dense, tps_prot, lat) = _throughput_rows(quick, code_name)
+    tput, (tps_dense, tps_prot, tps_unfused, fused_bitexact, lat) = \
+        _throughput_rows(quick, code_name)
     rows += tput
     raw_bers = [1e-2] if quick else [1e-2, 1e-3]
     qual = _quality_rows(quick, code_name, raw_bers)
@@ -287,10 +320,14 @@ def main(quick: bool = False):
     rows.append({
         "section": "acceptance", "code": code_name,
         "protected_slowdown": round(tps_dense / tps_prot, 3),
+        "fused_speedup": round(tps_prot / tps_unfused, 3),
+        "fused_bitexact": fused_bitexact,
         "overlap_speedup": round(lat["sync"] / lat["overlap"], 3),
         "ppl_delta_protected": at["ppl_delta_protected"],
         "ppl_delta_unprotected": at["ppl_delta_unprotected"],
         "pass": bool(tps_prot * 2 >= tps_dense
+                     and tps_prot > tps_unfused
+                     and fused_bitexact
                      and lat["overlap"] < lat["sync"]
                      and at["ppl_delta_protected"]
                      < at["ppl_delta_unprotected"]),

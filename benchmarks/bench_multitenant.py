@@ -92,8 +92,10 @@ def _timed_run(eng: ServingEngine, prompts, gen: int, *, inject_eps=0.0,
 
 
 def _engine(params, cfg, n: int, gen: int, page_tokens: int, *,
-            protected: bool, pool=None, scrub: bool = False):
-    pkv = ProtectedKVConfig(code_name=CODE_NAME, page_tokens=page_tokens)
+            protected: bool, pool=None, scrub: bool = False,
+            fused: bool = True):
+    pkv = ProtectedKVConfig(code_name=CODE_NAME, page_tokens=page_tokens,
+                            fused=fused)
     kw = dict(scrub_every=2, scrub_max_pages=8) if scrub else {}
     return ServingEngine(params, cfg, pkv=pkv, pool=pool, max_active=n,
                          max_seq=64, protected=protected, **kw)
@@ -152,6 +154,36 @@ def main(quick: bool = False):
         rows.append({"section": "bit_exact", "sequences": 16,
                      "tenants_checked": 16, "pass": bool(bit_exact)})
 
+    # fused vs unfused protected read at top occupancy: the batched
+    # one-kernel GF-page attention (default) against the per-page
+    # streaming ablation — same engine, same prompts, token streams must
+    # be identical (the fused recurrence is the jitted streaming
+    # recurrence by construction)
+    hi = 16 if 16 in counts else counts[-1]
+    fres = {}
+    for fused in (True, False):
+        # full-generation warm for BOTH sides: the fused read compiles one
+        # executable per page-count bucket, and the larger buckets only
+        # appear late in a run — the scaling loop's short warm would bill
+        # those compiles to the fused timed run
+        warm = _engine(params, cfg, hi, gen, page_tokens, protected=True,
+                       pool=pool, fused=fused)
+        _timed_run(warm, prompts[:hi], gen)
+        eng = _engine(params, cfg, hi, gen, page_tokens, protected=True,
+                      pool=pool, fused=fused)
+        res, tokens, dt, _ = _timed_run(eng, prompts[:hi], gen)
+        fres[fused] = (res, tokens / dt)
+    tps_fused, tps_unfused = fres[True][1], fres[False][1]
+    fused_match = fres[True][0] == fres[False][0]
+    fused_speedup = tps_fused / tps_unfused
+    rows.append({
+        "section": "fused", "sequences": hi,
+        "tokens_per_s_fused": round(tps_fused, 2),
+        "tokens_per_s_unfused": round(tps_unfused, 2),
+        "fused_speedup": round(fused_speedup, 3),
+        "fused_outputs_match": bool(fused_match),
+    })
+
     # scrub interleave: noisy 16-way serving with and without background
     # pool scrubbing (same injections), aggregate throughput ratio
     n_scrub = 16 if 16 in counts else counts[-1]
@@ -188,7 +220,6 @@ def main(quick: bool = False):
         "outputs_match_no_scrub": bool(scrub_outputs_match),
     })
 
-    hi = 16 if 16 in counts else counts[-1]
     scaling = tps[(hi, "protected")] / tps[(1, "protected")]
     rows.append({
         "section": "acceptance", "code": CODE_NAME,
@@ -197,9 +228,11 @@ def main(quick: bool = False):
         "scaling_1_to_16": round(scaling, 2),
         "dense_tps_16": round(tps[(hi, "dense")], 2),
         "bit_exact": bool(bit_exact),
+        "fused_speedup": round(fused_speedup, 3),
+        "fused_outputs_match": bool(fused_match),
         "scrub_cost_frac": round(scrub_cost, 4),
         "pass": bool(scaling >= 2.0 and bit_exact and scrub_cost < 0.2
-                     and scrub_outputs_match),
+                     and fused_match and scrub_outputs_match),
     })
     return rows
 

@@ -46,8 +46,10 @@ def _bench_backend(code_name: str, backend: str, mbytes: float, eps: float,
     """Rows for one (backend, paging) point + the repaired storage bytes
     for cross-backend parity checking."""
     code = get_code(code_name)
+    from repro.kernels.backend import policy_from_scan_backend
     mem = ProtectedMemoryArray(code, controller="writeback",
-                               chunk_size=chunk_size, scan_backend=backend)
+                               chunk_size=chunk_size,
+                               policy=policy_from_scan_backend(backend))
     n_words = _fill(mem, mbytes)
     cells = n_words * code.n
 

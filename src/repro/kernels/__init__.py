@@ -1,4 +1,8 @@
 """Pallas TPU kernels for the paper's compute hot-spots (validated on CPU with
-interpret=True against the pure-jnp oracles in ref.py)."""
+interpret=True against the pure-jnp oracles in ref.py). Backend selection —
+compiled / interpret / ref — is one `KernelPolicy` (backend.py)."""
 from . import ops, ref
-from .ops import fbp_cn, fbp_cn_batched, gf_matmul, pim_mac, scan_syndromes
+from .backend import (KernelPolicy, current_policy, resolve_interpret,
+                      resolve_mode, use_policy)
+from .ops import (attend_protected, fbp_cn, fbp_cn_batched, gf_matmul,
+                  pim_mac, scan_syndromes)

@@ -1,20 +1,154 @@
-"""Backend dispatch shared by every Pallas kernel entry point.
+"""Kernel-backend policy shared by every Pallas kernel entry point.
 
-Kernels compile natively only on TPU; everywhere else (CPU unit tests,
-GPU hosts without a Mosaic backend) they run under the Pallas interpreter.
-Both the jitted public wrappers in `ops.py` and the raw `*_pallas`
-entry points resolve their `interpret=None` default through this one
-predicate so direct callers never silently interpret on a real TPU.
+One knob instead of three: `KernelPolicy` replaces the per-call
+`interpret: bool | None` defaults, `PagedProtectedStore(backend=...)` and
+`MemoryController(scan_backend=...)` that had each grown their own
+auto/host/device vocabulary. A policy resolves to one of three modes:
+
+- **compiled**  — native Pallas (Mosaic) kernels; only available on TPU.
+- **interpret** — the Pallas interpreter: same kernel code, any backend.
+  This is a *parity/validation* path, not a fast path.
+- **ref**       — the pure-jnp oracles in `kernels/ref.py` (jitted). The
+  fast path everywhere Mosaic can't compile, bit-identical to the kernels
+  by the parity tests.
+
+`KernelPolicy("auto")` (the default) resolves to `compiled` on TPU and
+`ref` elsewhere — the dispatch every subsystem previously hand-rolled.
+`use_policy(...)` installs a different policy for a `with` block so tests
+and benches can force any mode:
+
+    with use_policy("interpret"):
+        out = ops.scan_syndromes(y, ht, p)      # Pallas interpreter on CPU
+
+Resolution happens at trace/build time (backends don't change inside a
+process), so cached executables bake in the mode that was current when
+they were first built.
+
+Legacy keywords (`backend=`, `scan_backend=`) are mapped onto policies by
+`policy_from_store_backend` / `policy_from_scan_backend`; their call sites
+emit a one-release `DeprecationWarning`.
 """
 from __future__ import annotations
 
+import contextlib
+import dataclasses
+
 import jax
+
+__all__ = ["KernelPolicy", "current_policy", "use_policy", "resolve_mode",
+           "resolve_interpret", "interpret_default",
+           "policy_from_store_backend", "policy_from_scan_backend"]
+
+MODES = ("auto", "compiled", "interpret", "ref")
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelPolicy:
+    """Where kernel work runs: auto | compiled | interpret | ref."""
+
+    mode: str = "auto"
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(f"mode {self.mode!r} not in {MODES}")
+
+    def resolve(self) -> str:
+        """The concrete mode: compiled / interpret / ref."""
+        if self.mode != "auto":
+            return self.mode
+        return "compiled" if jax.default_backend() == "tpu" else "ref"
+
+    @property
+    def use_pallas(self) -> bool:
+        """True when work should run through a Pallas kernel at all."""
+        return self.resolve() != "ref"
+
+    @property
+    def interpret(self) -> bool:
+        """The `interpret=` flag a Pallas call under this policy gets."""
+        return self.resolve() != "compiled"
+
+
+_current = KernelPolicy()
+
+
+def _as_policy(policy) -> KernelPolicy:
+    if isinstance(policy, KernelPolicy):
+        return policy
+    if isinstance(policy, str):
+        return KernelPolicy(policy)
+    raise TypeError(f"expected KernelPolicy or mode string, got {policy!r}")
+
+
+def current_policy() -> KernelPolicy:
+    return _current
+
+
+@contextlib.contextmanager
+def use_policy(policy):
+    """Install `policy` (a KernelPolicy or a mode string) for the block."""
+    global _current
+    prev = _current
+    _current = _as_policy(policy)
+    try:
+        yield _current
+    finally:
+        _current = prev
+
+
+def resolve_mode(policy=None) -> str:
+    """Concrete mode for `policy`, defaulting to the ambient policy."""
+    pol = _current if policy is None else _as_policy(policy)
+    return pol.resolve()
+
+
+def resolve_interpret(interpret: bool | None, policy=None) -> bool:
+    """Resolve a Pallas call's `interpret=` flag.
+
+    Explicit booleans are honored (the low-level escape hatch); None defers
+    to the policy — interpret everywhere except compiled-on-TPU, exactly the
+    old `interpret_default()` contract under the default auto policy."""
+    if interpret is not None:
+        return bool(interpret)
+    pol = _current if policy is None else _as_policy(policy)
+    return pol.interpret
 
 
 def interpret_default() -> bool:
-    """True (interpret mode) everywhere except a real TPU backend."""
-    return jax.default_backend() != "tpu"
+    """True (interpret mode) unless the ambient policy compiles natively."""
+    return _current.interpret
 
 
-def resolve_interpret(interpret: bool | None) -> bool:
-    return interpret_default() if interpret is None else bool(interpret)
+# ---------------------------------------------------------------------------
+# legacy-keyword converters (one-release deprecated aliases)
+# ---------------------------------------------------------------------------
+
+
+def policy_from_store_backend(backend: str) -> KernelPolicy:
+    """Map the old `PagedProtectedStore(backend=...)` vocabulary:
+    auto -> auto, kernel -> the Pallas path (compiled on TPU, interpreter
+    elsewhere — what `backend="kernel"` always meant), ref -> ref."""
+    if backend not in ("auto", "kernel", "ref"):
+        raise ValueError(f"backend {backend!r} not in ('auto', 'kernel', "
+                         "'ref')")
+    if backend == "auto":
+        return KernelPolicy("auto")
+    if backend == "ref":
+        return KernelPolicy("ref")
+    return KernelPolicy("compiled" if jax.default_backend() == "tpu"
+                        else "interpret")
+
+
+def policy_from_scan_backend(scan_backend: str) -> KernelPolicy:
+    """Map the old `MemoryController(scan_backend=...)` vocabulary:
+    auto -> auto, host -> ref (the exact host BLAS scan), device -> the
+    Pallas kernel (compiled on TPU, interpreter elsewhere)."""
+    if scan_backend not in ("auto", "host", "device"):
+        raise ValueError(f"scan_backend {scan_backend!r} not in ('auto', "
+                         "'host', 'device')")
+    if scan_backend == "auto":
+        return KernelPolicy("auto")
+    if scan_backend == "host":
+        return KernelPolicy("ref")
+    return KernelPolicy("compiled" if jax.default_backend() == "tpu"
+                        else "interpret")

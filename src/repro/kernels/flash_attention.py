@@ -37,6 +37,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .backend import resolve_interpret
+
 DEFAULT_BLOCK_Q = 512
 DEFAULT_BLOCK_KV = 512
 NEG_INF = -1e30
@@ -114,9 +116,12 @@ def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, acc, m, l, *,
 def flash_fwd(q, k, v, *, g: int, scale: float, causal: bool, window: int,
               softcap: float, bq: int = DEFAULT_BLOCK_Q,
               bk: int = DEFAULT_BLOCK_KV, kv_len: int = 0,
-              interpret: bool = True):
+              interpret: bool | None = None):
     """q: (BH, Sq, D); k/v: (BHkv, Skv, D); g = Hq//Hkv (GQA group).
-    Returns (o (BH, Sq, D), lse (BH, Sq) fp32)."""
+    Returns (o (BH, Sq, D), lse (BH, Sq) fp32). `interpret=None` resolves
+    through the shared backend policy (compiled on TPU) — a hardcoded True
+    here used to silently interpret on real hardware."""
+    interpret = resolve_interpret(interpret)
     BH, Sq, D = q.shape
     _, Skv, _ = k.shape
     bq = min(bq, Sq)
@@ -231,9 +236,10 @@ def _bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
 def flash_bwd(q, k, v, o, lse, do, *, g: int, scale: float, causal: bool,
               window: int, softcap: float, bq: int = DEFAULT_BLOCK_Q,
               bk: int = DEFAULT_BLOCK_KV, kv_len: int = 0,
-              interpret: bool = True):
+              interpret: bool | None = None):
     """Returns (dq (BH,Sq,D), dk_h (BH,Skv,D), dv_h (BH,Skv,D)) — dk/dv are
     per-q-head; the wrapper sums groups of g to get the kv-head grads."""
+    interpret = resolve_interpret(interpret)
     BH, Sq, D = q.shape
     BHkv, Skv, _ = k.shape
     bq = min(bq, Sq)

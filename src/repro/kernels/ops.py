@@ -1,14 +1,25 @@
 """Jitted public wrappers for the Pallas kernels.
 
-Handle padding to tile multiples, backend dispatch (interpret=True everywhere
-except a real TPU), and expose drop-in callables for the core library:
-  - fbp_cn      : plugs into repro.core.decode.decode_llv(cn_fbp=...)
-  - gf_matmul   : encode / syndrome matmuls
-  - pim_mac     : quantized-MAC forward
+Handle padding to tile multiples, backend dispatch via
+`repro.kernels.backend.KernelPolicy` (compiled on TPU, interpret/ref
+elsewhere — override with `use_policy`), and expose drop-in callables for
+the core library:
+  - fbp_cn           : plugs into repro.core.decode.decode_llv(cn_fbp=...)
+  - gf_matmul        : encode / syndrome matmuls
+  - pim_mac          : quantized-MAC forward
+  - attend_protected : fused GF-page paged attention (the serving hot path)
+
+Each wrapper resolves its backend OUTSIDE the jit boundary (the inner
+jitted impls take the resolved `interpret` flag as a static arg), so a
+`with use_policy(...)` override always selects the right executable
+instead of hitting a trace cached under an earlier policy. The per-call
+`interpret: bool | None` keyword is retained as a low-level escape hatch;
+prefer `KernelPolicy` / `use_policy` for mode selection.
 """
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -16,7 +27,8 @@ import jax.numpy as jnp
 from . import fbp as _fbp
 from . import gf_matmul as _gfm
 from . import pim_mac as _pm
-from .backend import interpret_default as _interpret_default
+from .backend import resolve_interpret as _resolve_interpret
+from .backend import resolve_mode as _resolve_mode
 from repro.core.llv import NEG_INF
 
 
@@ -30,10 +42,8 @@ def _pad_to(x, axis, multiple, value=0):
 
 
 @functools.partial(jax.jit, static_argnames=("p", "tile_n", "interpret"))
-def fbp_cn(m_hat: jnp.ndarray, p: int, *, tile_n: int = _fbp.DEFAULT_TILE_N,
-           interpret: bool | None = None) -> jnp.ndarray:
-    """(N, dc, p) contribution-space messages -> reflected extrinsics."""
-    interpret = _interpret_default() if interpret is None else interpret
+def _fbp_cn_jit(m_hat: jnp.ndarray, p: int, tile_n: int,
+                interpret: bool) -> jnp.ndarray:
     N = m_hat.shape[0]
     # pick the tile first, then derive the pad FROM the chosen tile so the
     # padded batch is a tile multiple by construction (asserted below; the
@@ -51,6 +61,12 @@ def fbp_cn(m_hat: jnp.ndarray, p: int, *, tile_n: int = _fbp.DEFAULT_TILE_N,
     return out[:N]
 
 
+def fbp_cn(m_hat: jnp.ndarray, p: int, *, tile_n: int = _fbp.DEFAULT_TILE_N,
+           interpret: bool | None = None) -> jnp.ndarray:
+    """(N, dc, p) contribution-space messages -> reflected extrinsics."""
+    return _fbp_cn_jit(m_hat, p, tile_n, _resolve_interpret(interpret))
+
+
 def fbp_cn_batched(m_hat: jnp.ndarray, p: int, **kw) -> jnp.ndarray:
     """Adapter matching decode_llv's cn_fbp signature: (B, c, dc, p)."""
     B, c, dc, pp = m_hat.shape
@@ -58,12 +74,10 @@ def fbp_cn_batched(m_hat: jnp.ndarray, p: int, **kw) -> jnp.ndarray:
     return out.reshape(B, c, dc, pp)
 
 
-@functools.partial(jax.jit, static_argnames=("p", "bm", "bn", "bk", "interpret"))
-def gf_matmul(a: jnp.ndarray, b: jnp.ndarray, p: int, *, bm: int = 128,
-              bn: int = 128, bk: int = 128,
-              interpret: bool | None = None) -> jnp.ndarray:
-    """(a @ b) % p with padding to MXU-aligned blocks."""
-    interpret = _interpret_default() if interpret is None else interpret
+@functools.partial(jax.jit, static_argnames=("p", "bm", "bn", "bk",
+                                             "interpret"))
+def _gf_matmul_jit(a: jnp.ndarray, b: jnp.ndarray, p: int, bm: int, bn: int,
+                   bk: int, interpret: bool) -> jnp.ndarray:
     M, K = a.shape
     _, N = b.shape
     bm_, bn_, bk_ = (min(bm, max(8, M)), min(bn, max(8, N)), min(bk, max(8, K)))
@@ -76,8 +90,13 @@ def gf_matmul(a: jnp.ndarray, b: jnp.ndarray, p: int, *, bm: int = 128,
     return out[:M, :N]
 
 
-@functools.partial(jax.jit, static_argnames=("p", "bm", "bn", "bk",
-                                             "interpret"))
+def gf_matmul(a: jnp.ndarray, b: jnp.ndarray, p: int, *, bm: int = 128,
+              bn: int = 128, bk: int = 128,
+              interpret: bool | None = None) -> jnp.ndarray:
+    """(a @ b) % p with padding to MXU-aligned blocks."""
+    return _gf_matmul_jit(a, b, p, bm, bn, bk, _resolve_interpret(interpret))
+
+
 def encode_words(u: jnp.ndarray, P: jnp.ndarray, p: int, *, bm: int = 128,
                  bn: int = 128, bk: int = 128,
                  interpret: bool | None = None) -> jnp.ndarray:
@@ -96,17 +115,8 @@ def encode_words(u: jnp.ndarray, P: jnp.ndarray, p: int, *, bm: int = 128,
 
 
 @functools.partial(jax.jit, static_argnames=("p", "bm", "bk", "interpret"))
-def scan_syndromes(y: jnp.ndarray, ht: jnp.ndarray, p: int, *, bm: int = 128,
-                   bk: int = 128,
-                   interpret: bool | None = None) -> jnp.ndarray:
-    """Fused scrub syndrome scan: (B, n) words x (n, c) Hᵀ -> (B,) bool flags.
-
-    flags[i] = any((y[i] @ ht) % p != 0); the mod + any reduction is fused
-    into the matmul's last K-step so only the mask leaves the kernel. Pad
-    rows (zero words are valid codewords) and pad check columns (all-zero
-    Hᵀ columns accumulate 0 ≡ 0 mod p) can never raise a flag.
-    """
-    interpret = _interpret_default() if interpret is None else interpret
+def _scan_syndromes_jit(y: jnp.ndarray, ht: jnp.ndarray, p: int, bm: int,
+                        bk: int, interpret: bool) -> jnp.ndarray:
     M, K = y.shape
     _, C = ht.shape
     # the kernel accumulator is int32: every syndrome sum is bounded by
@@ -124,13 +134,24 @@ def scan_syndromes(y: jnp.ndarray, ht: jnp.ndarray, p: int, *, bm: int = 128,
     return out[:M, 0] != 0
 
 
+def scan_syndromes(y: jnp.ndarray, ht: jnp.ndarray, p: int, *, bm: int = 128,
+                   bk: int = 128,
+                   interpret: bool | None = None) -> jnp.ndarray:
+    """Fused scrub syndrome scan: (B, n) words x (n, c) Hᵀ -> (B,) bool flags.
+
+    flags[i] = any((y[i] @ ht) % p != 0); the mod + any reduction is fused
+    into the matmul's last K-step so only the mask leaves the kernel. Pad
+    rows (zero words are valid codewords) and pad check columns (all-zero
+    Hᵀ columns accumulate 0 ≡ 0 mod p) can never raise a flag.
+    """
+    return _scan_syndromes_jit(y, ht, p, bm, bk, _resolve_interpret(interpret))
+
+
 @functools.partial(jax.jit, static_argnames=("row_parallelism", "adc_levels",
                                              "bm", "bn", "interpret"))
-def pim_mac(x: jnp.ndarray, w: jnp.ndarray, *, row_parallelism: int = 0,
-            adc_levels: int = 0, bm: int = 128, bn: int = 128,
-            interpret: bool | None = None) -> jnp.ndarray:
-    """Row-group-quantized MAC (B, K) x (K, N) -> (B, N) int32."""
-    interpret = _interpret_default() if interpret is None else interpret
+def _pim_mac_jit(x: jnp.ndarray, w: jnp.ndarray, row_parallelism: int,
+                 adc_levels: int, bm: int, bn: int,
+                 interpret: bool) -> jnp.ndarray:
     B, K = x.shape
     _, N = w.shape
     R = row_parallelism if row_parallelism > 0 else K
@@ -142,6 +163,103 @@ def pim_mac(x: jnp.ndarray, w: jnp.ndarray, *, row_parallelism: int = 0,
     out = _pm.pim_mac_pallas(x, w, row_parallelism=R, adc_levels=adc_levels,
                              bm=bm_, bn=bn_, interpret=interpret)
     return out[:B, :N]
+
+
+def pim_mac(x: jnp.ndarray, w: jnp.ndarray, *, row_parallelism: int = 0,
+            adc_levels: int = 0, bm: int = 128, bn: int = 128,
+            interpret: bool | None = None) -> jnp.ndarray:
+    """Row-group-quantized MAC (B, K) x (K, N) -> (B, N) int32."""
+    return _pim_mac_jit(x, w, row_parallelism, adc_levels, bm, bn,
+                        _resolve_interpret(interpret))
+
+
+# ---------------------------------------------------------------------------
+# fused protected paged attention (the one-kernel serving hot path)
+# ---------------------------------------------------------------------------
+
+
+def np_bucket(n: int) -> int:
+    """Page-count bucket: next power of two (min 1). The fused executable's
+    shapes include the page axis, so serving pads the page stack to a
+    bucket with zero pages (valid codewords, scale 0, valid 0 — exact
+    no-ops in the online-softmax recurrence) and one trace serves a whole
+    range of sequence lengths instead of retracing on every page freeze."""
+    return 1 if n <= 1 else 2 ** math.ceil(math.log2(n))
+
+
+@functools.partial(jax.jit, static_argnames=("p", "k_info", "page_shape",
+                                             "softcap", "with_hot"))
+def _attend_protected_ref_jit(q, kpages, vpages, kscales, vscales, valid,
+                              hot_k, hot_v, hot_valid, *, p, k_info,
+                              page_shape, softcap, with_hot):
+    from .ref import attend_protected_ref
+    return attend_protected_ref(
+        q, kpages, vpages, kscales, vscales, valid, hot_k, hot_v, hot_valid,
+        p=p, k_info=k_info, page_shape=page_shape, softcap=softcap,
+        with_hot=with_hot)
+
+
+@functools.partial(jax.jit, static_argnames=("p", "k_info", "page_shape",
+                                             "softcap", "with_hot",
+                                             "interpret"))
+def _attend_protected_kernel_jit(q, kpages, vpages, kscales, vscales, valid,
+                                 hot_k, hot_v, hot_valid, *, p, k_info,
+                                 page_shape, softcap, with_hot, interpret):
+    from . import paged_attention as _pa
+    return _pa.attend_protected_pallas(
+        q, kpages, vpages, kscales, vscales, valid, hot_k, hot_v, hot_valid,
+        p=p, k_info=k_info, page_shape=page_shape, softcap=softcap,
+        with_hot=with_hot, interpret=interpret)
+
+
+def attend_protected(q, kpages, vpages, kscales, vscales, valid,
+                     hot_k, hot_v, hot_valid, *, p: int, k_info: int,
+                     page_shape, softcap: float = 0.0, with_hot: bool = True,
+                     policy=None):
+    """Fused protected paged attention: corrected GF pages + quantization
+    scales + query block -> attention output in one executable.
+
+    q: (B, Sq, Hq, D). kpages/vpages: (NP, S, W, n) int32 corrected GF
+    pages — page step j is S sub-pages of `page_shape` = (Bsub, T, Hkv, D)
+    stacked along batch (S·Bsub = B). kscales/vscales: (NP, S) f32 absmax
+    scales; valid: (NP, B) int32 per-step per-row valid token counts.
+    hot_k/hot_v: (B, T, Hkv, D) dense hot page applied last when
+    `with_hot`, filled to hot_valid (B,).
+
+    Dispatch follows `policy` (default: the ambient `KernelPolicy`): the
+    jnp oracle graph in ref mode — bit-exact vs the unfused streaming path
+    (`repro.nn.layers._attend_paged`) by shared-recurrence construction —
+    or the Pallas kernel (`kernels/paged_attention.py`, fp32 in-VMEM math,
+    allclose parity) compiled / interpreted otherwise. The page axis is
+    padded to `np_bucket(NP)` with no-op zero pages so one trace serves a
+    range of page counts.
+    """
+    NP = kpages.shape[0]
+    B = q.shape[0]
+    valid = jnp.asarray(valid, jnp.int32).reshape(max(NP, 0), B)
+    hot_valid = jnp.asarray(hot_valid, jnp.int32).reshape(B)
+    NB = np_bucket(NP)
+    if NB != NP:
+        pad = NB - NP
+
+        def zpad(x):
+            return jnp.concatenate(
+                [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)]) if NP else \
+                jnp.zeros((pad,) + x.shape[1:], x.dtype)
+
+        kpages, vpages = zpad(kpages), zpad(vpages)
+        kscales, vscales = zpad(kscales), zpad(vscales)
+        valid = zpad(valid)
+    kw = dict(p=int(p), k_info=int(k_info), page_shape=tuple(page_shape),
+              softcap=float(softcap or 0.0), with_hot=bool(with_hot))
+    mode = _resolve_mode(policy)
+    if mode == "ref":
+        return _attend_protected_ref_jit(
+            q, kpages, vpages, kscales, vscales, valid, hot_k, hot_v,
+            hot_valid, **kw)
+    return _attend_protected_kernel_jit(
+        q, kpages, vpages, kscales, vscales, valid, hot_k, hot_v, hot_valid,
+        interpret=(mode != "compiled"), **kw)
 
 
 # ---------------------------------------------------------------------------
@@ -179,7 +297,7 @@ def _pad_seq(x, mult):
 
 
 def _flash_fwd_rule(q, k, v, causal, window, softcap, scale, interpret):
-    interpret = _interpret_default() if interpret is None else interpret
+    interpret = _resolve_interpret(interpret)
     B, Sq, Hq, D = q.shape
     _, Skv, Hkv, _ = k.shape
     g = Hq // Hkv
@@ -199,7 +317,7 @@ def _flash_fwd_rule(q, k, v, causal, window, softcap, scale, interpret):
 
 def _flash_bwd_rule(causal, window, softcap, scale, interpret, res, do):
     q, k, v, o, lse = res
-    interpret = _interpret_default() if interpret is None else interpret
+    interpret = _resolve_interpret(interpret)
     B, Sq, Hq, D = q.shape
     _, Skv, Hkv, _ = k.shape
     g = Hq // Hkv

@@ -1,0 +1,159 @@
+"""Fused protected paged-attention Pallas kernel — the one-kernel serving
+hot path.
+
+The unfused serving read path interrupts the dataflow three times per KV
+page: decode the GF page to symbols (HBM), dequantize to bf16 K/V (HBM),
+then run one online-softmax update (HBM in, HBM out). This kernel takes
+the *corrected GF pages themselves* plus their quantization scales and the
+query block, and produces the attention output directly: per-page base-p
+desymbolize + int8 dequant feed the flash-attention recurrence in VMEM
+scratch, so corrected K/V never round-trips HBM — the paper's
+no-dataflow-interruption property applied to serving.
+
+Division of labor with the store: syndrome scanning and FBP correction of
+*flagged* pages happen upstream (`PagedProtectedStore.read_page_corrected`,
+the scan-gated fast path — clean pages skip the decoder entirely and most
+pages are clean), so the pages this kernel consumes are already corrected
+symbols; the kernel fuses everything after correction — desymbolize,
+dequant, QKᵀ, online softmax, ·V accumulate.
+
+Layout (page-granular flash attention, following `flash_attention.py`):
+grid = (NP,) over page steps with the output block revisited every step;
+fp32 (m, l, acc) running state lives in VMEM scratch; step j loads one
+(S, W, n) GF page block + its (S,) scales + the (B,) per-row valid counts.
+Page step j is S sub-pages of shape `page_shape` = (Bsub, T, Hkv, D)
+stacked along batch (S=1 for the single-tenant layer, S=B for the serving
+engine's per-slot pages). The dense hot page (tokens not yet frozen into
+GF storage) is applied as a final update inside the same kernel, and the
+last step writes `acc / l`.
+
+In-kernel math is fp32 end-to-end (no bf16 round-trip between dequant and
+QKᵀ — the corrected K/V exist only as VMEM fp32), so parity vs the
+bit-exact jnp oracle (`ref.attend_protected_ref`, which replicates the
+unfused path's bf16 casts) is allclose at bf16 tolerance, asserted by
+tests/test_fused_attention.py. Validated in interpret mode on CPU; Mosaic
+compilation on a real TPU is the ROADMAP's standing validation caveat.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .backend import resolve_interpret
+
+NEG_INF = -1e30
+
+
+def _dequant_block(page, scale, *, p, k_info, numel, D):
+    """(S, W, n) int32 GF page block + (S,) scales -> (S, numel) fp32.
+
+    Replicates `repro.memory.paged.dequantize_tensor`: slice the systematic
+    info symbols, clip digits into the field, little-endian base-p
+    desymbolize mod 256, recentre the int8 code, absmax-scale."""
+    S = page.shape[0]
+    info = page[:, :, :k_info].astype(jnp.int32)
+    digits = info.reshape(S, -1)[:, :numel * D].reshape(S, numel, D)
+    digits = jnp.clip(digits, 0, p - 1)
+    val = sum(digits[..., i] * p ** i for i in range(D)) % 256
+    return (val.astype(jnp.float32) - 128.0) * scale[:, None]
+
+
+def _update(q5, kpg, vpg, valid, m, l, acc, *, softcap):
+    """One online-softmax update on the VMEM carries. q5: (B,Sq,Hkv,G,D)
+    fp32; kpg/vpg: (B,T,Hkv,D) fp32; valid: (B,) int32."""
+    T = kpg.shape[1]
+    D = q5.shape[-1]
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", q5, kpg)
+    logits = logits / jnp.sqrt(jnp.float32(D))
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    ok = (jax.lax.iota(jnp.int32, T)[None, None, None, None, :]
+          < valid.reshape(-1, 1, 1, 1, 1))
+    logits = jnp.where(ok, logits, NEG_INF)
+    pm = logits.max(axis=-1, keepdims=True)
+    new_m = jnp.maximum(m[...], pm)
+    w = jnp.exp(logits - new_m)
+    corr = jnp.exp(m[...] - new_m)
+    l[...] = corr * l[...] + w.sum(axis=-1, keepdims=True)
+    acc[...] = corr * acc[...] + jnp.einsum(
+        "bhgqk,bkhd->bhgqd", w, vpg)
+    m[...] = new_m
+
+
+def _kernel(kp_ref, vp_ref, ks_ref, vs_ref, valid_ref, q_ref, hk_ref,
+            hv_ref, hval_ref, o_ref, m, l, acc, *, p, k_info, page_shape,
+            softcap, nps, with_hot):
+    j = pl.program_id(0)
+    Bsub, T, Hkv, Dh = page_shape
+    B, Sq, Hq, _ = q_ref.shape
+    G = Hq // Hkv
+    numel = Bsub * T * Hkv * Dh
+    D = math.ceil(8.0 / math.log2(p))          # base-p digits per byte
+
+    @pl.when(j == 0)
+    def _init():
+        m[...] = jnp.full_like(m, -jnp.inf)
+        l[...] = jnp.zeros_like(l)
+        acc[...] = jnp.zeros_like(acc)
+
+    q5 = q_ref[...].astype(jnp.float32).reshape(B, Sq, Hkv, G, Dh)
+    kpg = _dequant_block(kp_ref[0], ks_ref[0], p=p, k_info=k_info,
+                         numel=numel, D=D).reshape(B, T, Hkv, Dh)
+    vpg = _dequant_block(vp_ref[0], vs_ref[0], p=p, k_info=k_info,
+                         numel=numel, D=D).reshape(B, T, Hkv, Dh)
+    _update(q5, kpg, vpg, valid_ref[0], m, l, acc, softcap=softcap)
+
+    @pl.when(j == nps - 1)
+    def _fin():
+        if with_hot:
+            _update(q5, hk_ref[...].astype(jnp.float32),
+                    hv_ref[...].astype(jnp.float32), hval_ref[...],
+                    m, l, acc, softcap=softcap)
+        out = acc[...] / jnp.maximum(l[...], 1e-30)
+        out = out.transpose(0, 3, 1, 2, 4)      # (B,Sq,Hkv,G,D)
+        o_ref[...] = out.reshape(B, Sq, Hq, Dh).astype(o_ref.dtype)
+
+
+def attend_protected_pallas(q, kpages, vpages, kscales, vscales, valid,
+                            hot_k, hot_v, hot_valid, *, p: int, k_info: int,
+                            page_shape, softcap: float = 0.0,
+                            with_hot: bool = True,
+                            interpret: bool | None = None):
+    """Raw kernel entry point (shape contract in `ref.attend_protected_ref`;
+    use `ops.attend_protected` for policy dispatch + page bucketing).
+    kpages/vpages: (NP, S, W, n) with NP >= 1."""
+    NP, S, W, n = kpages.shape
+    B, Sq, Hq, Dh = q.shape
+    Bsub, T, Hkv, _ = page_shape
+    G = Hq // Hkv
+    kern = functools.partial(_kernel, p=p, k_info=k_info,
+                             page_shape=tuple(page_shape), softcap=softcap,
+                             nps=NP, with_hot=with_hot)
+    page_spec = pl.BlockSpec((1, S, W, n), lambda j: (j, 0, 0, 0))
+    scale_spec = pl.BlockSpec((1, S), lambda j: (j, 0))
+    full = lambda shape: pl.BlockSpec(shape, lambda j: (0,) * len(shape))
+    return pl.pallas_call(
+        kern,
+        grid=(NP,),
+        in_specs=[
+            page_spec, page_spec, scale_spec, scale_spec,
+            pl.BlockSpec((1, B), lambda j: (j, 0)),
+            full((B, Sq, Hq, Dh)),
+            full((B, T, Hkv, Dh)),
+            full((B, T, Hkv, Dh)),
+            full((B,)),
+        ],
+        out_specs=full((B, Sq, Hq, Dh)),
+        out_shape=jax.ShapeDtypeStruct((B, Sq, Hq, Dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((B, Hkv, G, Sq, 1), jnp.float32),
+            pltpu.VMEM((B, Hkv, G, Sq, 1), jnp.float32),
+            pltpu.VMEM((B, Hkv, G, Sq, Dh), jnp.float32),
+        ],
+        interpret=resolve_interpret(interpret),
+    )(kpages, vpages, kscales, vscales, valid, q, hot_k, hot_v, hot_valid)

@@ -56,6 +56,115 @@ def pim_mac_ref(x: jnp.ndarray, w: jnp.ndarray, *, row_parallelism: int,
     return partial.sum(axis=1)
 
 
+def paged_softmax_update(q, kpg, vpg, valid, m, l, acc, softcap=0.0):
+    """One online-softmax step over a decoded KV page — THE page-granular
+    flash-attention recurrence. This is the single source of truth shared
+    by the streaming reference path (`repro.nn.layers._paged_attn_update`
+    jits exactly this) and the fused `attend_protected_ref` oracle, so the
+    two paths are bit-identical by construction.
+
+    q: (B,Sq,Hq,D); kpg/vpg: (B,T,Hkv,D); valid: () or (B,) int32 tokens of
+    the page that are real per sequence. Carries (m, l, acc) in fp32 with
+    shapes (B,Hkv,G,Sq,1) / (B,Hkv,G,Sq,1) / (B,Hkv,G,Sq,D)."""
+    B, Sq, Hq, D = q.shape
+    T, Hkv = kpg.shape[1], kpg.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, D)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kpg).astype(jnp.float32)
+    logits = logits / jnp.sqrt(D).astype(jnp.float32)
+    if softcap and softcap > 0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    ok = (jnp.arange(T)[None, None, None, None, :]
+          < jnp.reshape(valid, (-1, 1, 1, 1, 1)))
+    logits = jnp.where(ok, logits, -1e30)
+    pm = logits.max(axis=-1, keepdims=True)          # (B,Hkv,G,Sq,1)
+    new_m = jnp.maximum(m, pm)
+    w = jnp.exp(logits - new_m)
+    corr = jnp.exp(m - new_m)
+    new_l = corr * l + w.sum(axis=-1, keepdims=True)
+    new_acc = corr * acc + jnp.einsum(
+        "bhgqk,bkhd->bhgqd", w, vpg.astype(jnp.float32))
+    return new_m, new_l, new_acc
+
+
+def paged_softmax_init(B, Hkv, G, Sq, D):
+    """Fresh (m, l, acc) carries for the paged recurrence."""
+    return (jnp.full((B, Hkv, G, Sq, 1), -jnp.inf, jnp.float32),
+            jnp.zeros((B, Hkv, G, Sq, 1), jnp.float32),
+            jnp.zeros((B, Hkv, G, Sq, D), jnp.float32))
+
+
+def paged_softmax_finalize(q, m, l, acc):
+    """(m, l, acc) -> (B, Sq, Hq, D) output in q.dtype."""
+    B, Sq, Hq, D = q.shape
+    out = acc / jnp.maximum(l, 1e-30)
+    out = out.transpose(0, 3, 1, 2, 4)               # (B,Sq,Hkv,G,D)
+    return out.reshape(B, Sq, Hq, D).astype(q.dtype)
+
+
+def dequant_gf_page(words, scale, *, p: int, k_info: int, page_shape,
+                    dtype=jnp.bfloat16):
+    """GF page(s) -> dequantized tensor, replicating
+    `repro.memory.paged.dequantize_tensor` exactly (slice info symbols,
+    desymbolize base-p digits, absmax-int8 dequant, cast).
+
+    words: (..., W, n) int32 codeword page(s); scale: (...) f32 absmax
+    scales (one per leading element). Returns (...,) + page_shape in
+    `dtype`. Bit-exact against dequantize_tensor on the same words/meta."""
+    import numpy as np
+    from repro.memory.packing import desymbolize_u8, digits_per_byte
+    lead = words.shape[:-2]
+    numel = int(np.prod(page_shape))
+    D = digits_per_byte(p)
+    info = words[..., :k_info].astype(jnp.int32)
+    digits = info.reshape(lead + (-1,))[..., :numel * D]
+    digits = digits.reshape(lead + (numel, D))
+    u8 = desymbolize_u8(digits, p)
+    qv = u8.astype(jnp.float32) - 128.0
+    out = (qv * jnp.reshape(scale, lead + (1,))).astype(dtype)
+    return out.reshape(lead + tuple(page_shape))
+
+
+def attend_protected_ref(q, kpages, vpages, kscales, vscales, valid,
+                         hot_k, hot_v, hot_valid, *, p: int, k_info: int,
+                         page_shape, softcap: float = 0.0,
+                         with_hot: bool = True):
+    """Fused protected-attention oracle: GF pages + scales + query block ->
+    attention output, in ONE traced graph (dequant + online-softmax per
+    page, no decoded K/V ever materialized between executables).
+
+    kpages/vpages: (NP, S, W, n) int32 corrected GF pages — page step j is
+    S sub-pages of `page_shape` = (Bsub, T, Hkv, D) stacked to the batch
+    (S=1, Bsub=B for the single-tenant layer; S=B, Bsub=1 for the engine's
+    per-slot pages). kscales/vscales: (NP, S) f32 absmax scales. valid:
+    (NP, B) int32 per-step per-row valid tokens (0 rows are masked — pad
+    pages and empty slots). hot_k/hot_v: (B, T, Hkv, D) dense hot page,
+    applied last when `with_hot` with hot_valid (B,) fill levels.
+
+    Per-page math is `paged_softmax_update` on pages dequantized by
+    `dequant_gf_page` — the exact functions the unfused streaming path
+    jits — so fused output is bit-identical to `_attend_paged` over the
+    same pages."""
+    B, Sq, Hq, D = q.shape
+    Bsub, T, Hkv, Dh = page_shape
+    G = Hq // Hkv
+    NP = kpages.shape[0]
+    m, l, acc = paged_softmax_init(B, Hkv, G, Sq, D)
+    for j in range(NP):
+        kpg = dequant_gf_page(kpages[j], kscales[j], p=p, k_info=k_info,
+                              page_shape=page_shape, dtype=hot_k.dtype)
+        vpg = dequant_gf_page(vpages[j], vscales[j], p=p, k_info=k_info,
+                              page_shape=page_shape, dtype=hot_v.dtype)
+        kpg = kpg.reshape(B, T, Hkv, Dh)
+        vpg = vpg.reshape(B, T, Hkv, Dh)
+        m, l, acc = paged_softmax_update(q, kpg, vpg, valid[j], m, l, acc,
+                                         softcap=softcap)
+    if with_hot:
+        m, l, acc = paged_softmax_update(q, hot_k, hot_v, hot_valid,
+                                         m, l, acc, softcap=softcap)
+    return paged_softmax_finalize(q, m, l, acc)
+
+
 def flash_attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0,
                         scale=None):
     """Naive attention oracle. q: (B,Sq,Hq,D), k/v: (B,Skv,Hkv,D) -> like q.

@@ -97,11 +97,23 @@ class MemoryController:
     def __init__(self, *, n_iters: int = 10, damping: float = 0.3,
                  llv_scale: float = 4.0, llv_mode: str = "manhattan",
                  chunk_size: int = 256, use_sharded: Optional[bool] = None,
-                 scan_backend: str = "auto", scan_block: int = 512,
-                 page_words: Optional[int] = None):
-        if scan_backend not in ("auto", "host", "device"):
-            raise ValueError(f"scan_backend {scan_backend!r} not in "
-                             "('auto', 'host', 'device')")
+                 scan_backend: Optional[str] = None, scan_block: int = 512,
+                 page_words: Optional[int] = None, policy=None):
+        if scan_backend is not None:
+            import warnings
+            warnings.warn(
+                "MemoryController(scan_backend=...) is deprecated; pass "
+                "policy=repro.kernels.KernelPolicy(mode) or set the ambient "
+                "policy with repro.kernels.use_policy. The scan_backend "
+                "keyword will be removed next release.",
+                DeprecationWarning, stacklevel=2)
+            if policy is None:
+                from repro.kernels.backend import policy_from_scan_backend
+                policy = policy_from_scan_backend(scan_backend)
+        if policy is not None:
+            from repro.kernels.backend import _as_policy
+            policy = _as_policy(policy)
+        self.policy = policy
         self.n_iters = n_iters
         self.damping = damping
         self.llv_scale = llv_scale
@@ -109,7 +121,8 @@ class MemoryController:
         self.chunk_size = chunk_size
         self.use_sharded = (len(jax.devices()) > 1 if use_sharded is None
                             else use_sharded)
-        self.scan_backend = scan_backend
+        self.scan_backend = scan_backend if scan_backend is not None \
+            else "auto"
         self.scan_block = scan_block
         self.page_words = page_words          # default paging for sweeps
         self.stats = ControllerStats()
@@ -174,10 +187,18 @@ class MemoryController:
 
     # -- syndrome-scan backends ---------------------------------------------
 
+    def _scan_mode(self) -> str:
+        """Resolved kernel mode for scans: the controller's pinned policy,
+        else the ambient one."""
+        from repro.kernels.backend import current_policy
+        return (self.policy or current_policy()).resolve()
+
     def resolved_scan_backend(self) -> str:
-        if self.scan_backend == "auto":
-            return "device" if jax.default_backend() == "tpu" else "host"
-        return self.scan_backend
+        # "ref" mode is the host BLAS/int64 scan; compiled and interpret
+        # both run the device (Pallas) scan executable. Matches the legacy
+        # scan_backend mapping: auto -> device only on TPU, host -> ref,
+        # device -> Pallas (interpreted off-TPU).
+        return "host" if self._scan_mode() == "ref" else "device"
 
     def _scan_route(self, code: LDPCCode) -> str:
         """The backend a scan of `code` ACTUALLY runs on: the device kernel
@@ -238,9 +259,12 @@ class MemoryController:
         else:
             from repro.kernels.ops import scan_syndromes
             ht = jnp.asarray(code.H.T, jnp.int32)
+            # bake the resolved interpret flag in at build time so a later
+            # ambient-policy change can't retarget this cached executable
+            interp = self._scan_mode() != "compiled"
 
             def run(y):
-                return scan_syndromes(y, ht, code.p)
+                return scan_syndromes(y, ht, code.p, interpret=interp)
 
         fn = jax.jit(run)
         self._scan_cache[id(code)] = (code, fn)

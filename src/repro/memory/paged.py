@@ -120,16 +120,29 @@ class PagedProtectedStore:
                  page_words: int = 256, mesh=None, n_iters: int = 10,
                  damping: float = 0.3, llv_scale: float = 4.0,
                  llv_mode: str = "manhattan", key: int = 0,
-                 backend: str = "auto"):
-        if backend not in ("auto", "kernel", "ref"):
-            raise ValueError(f"backend {backend!r} not in "
-                             "('auto', 'kernel', 'ref')")
+                 backend: str | None = None, policy=None):
+        if backend is not None:
+            import warnings
+            warnings.warn(
+                "PagedProtectedStore(backend=...) is deprecated; pass "
+                "policy=repro.kernels.KernelPolicy(mode) or set the ambient "
+                "policy with repro.kernels.use_policy. The backend keyword "
+                "will be removed next release.",
+                DeprecationWarning, stacklevel=2)
+            if policy is None:
+                from repro.kernels.backend import policy_from_store_backend
+                policy = policy_from_store_backend(backend)
         self.code = get_code(code) if isinstance(code, str) else code
-        # like MemoryController.scan_backend: the Pallas kernels compile
-        # natively only on TPU; everywhere else interpret-mode is a
-        # correctness path, so "auto" routes encode/scan to the jitted jnp
-        # oracles there (bit-identical by the kernel parity tests)
-        self.backend = backend
+        # Backend selection is one KernelPolicy (repro.kernels.backend):
+        # None defers to the ambient policy at executable-build time —
+        # "auto" compiles the Pallas kernels natively on TPU and routes to
+        # the jitted jnp oracles elsewhere (bit-identical by the kernel
+        # parity tests); interpret-mode is the CPU correctness path.
+        if policy is not None:
+            from repro.kernels.backend import _as_policy
+            policy = _as_policy(policy)
+        self.policy = policy
+        self.backend = backend if backend is not None else "auto"
         if page_words <= 0:
             raise ValueError(f"page_words must be positive, got {page_words}")
         if mesh is not None:
@@ -204,24 +217,34 @@ class PagedProtectedStore:
 
     # -- cached executables -------------------------------------------------
 
+    def _mode(self) -> str:
+        """Resolved kernel mode: the store's pinned policy, else the
+        ambient one — sampled when a cached executable is (re)built."""
+        from repro.kernels.backend import current_policy
+        return (self.policy or current_policy()).resolve()
+
     def _use_kernels(self) -> bool:
-        if self.backend == "auto":
-            return jax.default_backend() == "tpu"
-        return self.backend == "kernel"
+        return self._mode() != "ref"
 
     def _encoder(self):
         """One cached (page_words, k) device-encode executable: the Pallas
-        `encode_words` MXU path on TPU, its jitted jnp oracle elsewhere."""
+        `encode_words` MXU path on TPU, its jitted jnp oracle elsewhere.
+        The resolved mode is baked in at build time (the interpret flag is
+        passed explicitly so a later ambient-policy change can't silently
+        retarget a cached trace)."""
         if self._encode_fn is None:
             P = jnp.asarray(self.code.P, jnp.int32)
             p = self.code.p
-            if self._use_kernels():
+            mode = self._mode()
+            if mode != "ref":
                 from repro.kernels.ops import encode_words
-                fn = encode_words
+                interp = mode == "interpret"
+                self._encode_fn = jax.jit(
+                    lambda u: encode_words(u, P, p, interpret=interp))
             else:
                 from repro.kernels.ref import encode_words_ref
-                fn = encode_words_ref
-            self._encode_fn = jax.jit(lambda u: fn(u, P, p))
+                self._encode_fn = jax.jit(
+                    lambda u: encode_words_ref(u, P, p))
         return self._encode_fn
 
     def _scanner(self):
@@ -237,13 +260,16 @@ class PagedProtectedStore:
             else:
                 ht = jnp.asarray(self.code.H.T, jnp.int32)
                 p = self.code.p
-                if self._use_kernels():
+                mode = self._mode()
+                if mode != "ref":
                     from repro.kernels.ops import scan_syndromes
-                    fn = scan_syndromes
+                    interp = mode == "interpret"
+                    self._scan_fn = jax.jit(
+                        lambda y: scan_syndromes(y, ht, p, interpret=interp))
                 else:
                     from repro.kernels.ref import scan_syndromes_ref
-                    fn = scan_syndromes_ref
-                self._scan_fn = jax.jit(lambda y: fn(y, ht, p))
+                    self._scan_fn = jax.jit(
+                        lambda y: scan_syndromes_ref(y, ht, p))
         return self._scan_fn
 
     def _decoder(self):

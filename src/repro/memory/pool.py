@@ -53,20 +53,32 @@ class ProtectedPagePool:
                  page_words: int = 256, capacity_pages: int = 64,
                  mesh=None, n_iters: int = 10, damping: float = 0.3,
                  llv_scale: float = 4.0, llv_mode: str = "manhattan",
-                 backend: str = "auto"):
+                 backend: str | None = None, policy=None):
         if capacity_pages <= 0:
             raise ValueError(
                 f"capacity_pages must be positive, got {capacity_pages}")
+        if backend is not None:
+            import warnings
+            warnings.warn(
+                "ProtectedPagePool(backend=...) is deprecated; pass "
+                "policy=repro.kernels.KernelPolicy(mode) or set the ambient "
+                "policy with repro.kernels.use_policy. The backend keyword "
+                "will be removed next release.",
+                DeprecationWarning, stacklevel=2)
+            if policy is None:
+                from repro.kernels.backend import policy_from_store_backend
+                policy = policy_from_store_backend(backend)
         # the template store carries the code, validation, and the cached
         # encode/scan/decode executables every PooledStore delegates to
         self._template = PagedProtectedStore(
             code, page_words=page_words, mesh=mesh, n_iters=n_iters,
             damping=damping, llv_scale=llv_scale, llv_mode=llv_mode,
-            backend=backend)
+            policy=policy)
         self.code = self._template.code
         self.page_words = page_words
         self.mesh = mesh
-        self.backend = backend
+        self.backend = backend if backend is not None else "auto"
+        self.policy = self._template.policy
         self.capacity_pages = capacity_pages
         self._storage: List[Optional[jnp.ndarray]] = [None] * capacity_pages
         self._refcount = [0] * capacity_pages
@@ -257,7 +269,7 @@ class PooledStore(PagedProtectedStore):
                          damping=pool._template.damping,
                          llv_scale=pool._template.llv_scale,
                          llv_mode=pool._template.llv_mode, key=key,
-                         backend=pool.backend)
+                         policy=pool.policy)
         self.pool = pool
         self.owner = owner
         self.block_table: List[int] = []

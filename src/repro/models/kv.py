@@ -39,6 +39,7 @@ from repro.configs.base import ArchConfig
 from repro.memory.paged import (PagedProtectedStore, dequantize_tensor,
                                 quantize_tensor, words_for_tensor)
 from repro.memory.pool import PooledStore, ProtectedPagePool
+from repro.nn.kv_source import KVSource
 
 __all__ = ["ProtectedKVConfig", "ProtectedKVLayer", "ProtectedKVCaches"]
 
@@ -54,6 +55,11 @@ class ProtectedKVConfig:
     corrected: bool = True         # False: raw-level reads (unprotected
                                    # quality ablation — same quantization,
                                    # no correction)
+    fused: bool = True             # serve corrected reads through the fused
+                                   # GF-page attention kernel
+                                   # (ops.attend_protected); False streams
+                                   # decoded pages through _attend_paged
+                                   # (the exact-parity reference path)
     overlap: bool = True           # False: block on every page decode
                                    # (synchronous whole-cache ablation)
     mesh: Any = None               # shard pages across a local device mesh
@@ -63,9 +69,14 @@ class ProtectedKVConfig:
                                    # storage — the multi-tenant path
 
 
-class ProtectedKVLayer:
+class ProtectedKVLayer(KVSource):
     """One self-attention layer's protected K/V: two paged stores (K and V),
-    a dense hot page, and a memoized decoded view."""
+    a dense hot page, and a memoized decoded view. Implements `KVSource`:
+    `attend` serves corrected reads through the fused GF-page attention
+    kernel (the one-kernel hot path) and keeps the streaming
+    `pages()`/`_attend_paged` path as the exact-parity reference."""
+
+    kind = "protected"
 
     def __init__(self, pkv: ProtectedKVConfig, batch: int, hkv: int,
                  dh: int, dtype=jnp.bfloat16, owner: Any = None):
@@ -109,6 +120,10 @@ class ProtectedKVLayer:
         self.n_frozen = 0              # frozen tokens (== pages * page_tokens)
         self._metas: list = []         # per frozen page: (k_meta, v_meta)
         self._decoded: Optional[list] = None   # memoized [(k_pg, v_pg)]
+        # fused-path memo: corrected GF codeword pages [(k_words, v_words)]
+        # (what attend_protected consumes — symbols, not dequantized K/V)
+        self._gf_pages: Optional[list] = None
+        self._gf_stack = None          # stacked (NP,1,W,n)/(NP,1) arrays
 
     # -- write path ---------------------------------------------------------
 
@@ -148,14 +163,23 @@ class ProtectedKVLayer:
             # view of this page is the dequantized pre-encode words
             self._decoded.append((dequantize_tensor(kw, kmeta, code.p),
                                   dequantize_tensor(vw, vmeta, code.p)))
+        if self._gf_pages is not None:
+            # fused-path write-through: the store page just written IS the
+            # corrected codeword page (one KV page == one store page)
+            j = self.k_store.n_pages - 1
+            self._gf_pages.append((self.k_store.page(j),
+                                   self.v_store.page(j)))
+            self._gf_stack = None
         self.n_frozen += self.pkv.page_tokens
         self.hot_len = 0
 
     # -- read path ----------------------------------------------------------
 
     def invalidate(self) -> None:
-        """Drop the memoized decoded view (storage changed under it)."""
+        """Drop the memoized decoded views (storage changed under them)."""
         self._decoded = None
+        self._gf_pages = None
+        self._gf_stack = None
 
     def inject(self, channel, key=None, **kw) -> int:
         """Corrupt both stores through a channel model; invalidates the
@@ -185,6 +209,8 @@ class ProtectedKVLayer:
         self.n_frozen = 0
         self._metas = []
         self._decoded = None
+        self._gf_pages = None
+        self._gf_stack = None
 
     def _refill_iter(self):
         """Decode + dequantize the frozen pages, one at a time.
@@ -239,6 +265,68 @@ class ProtectedKVLayer:
         if self.hot_len:
             yield self.hot_k, self.hot_v, self.hot_len
 
+    # -- fused read path ----------------------------------------------------
+
+    def _refill_gf(self) -> list:
+        """Corrected GF codeword pages for the fused kernel, page by page
+        through the scan-gated `read_page_corrected` (clean pages skip the
+        decoder; corrections land in the stores' stats). Memoized until
+        storage is corrupted, with `_freeze` write-through appends."""
+        if self._gf_pages is None:
+            self._gf_pages = [
+                (self.k_store.read_page_corrected(i),
+                 self.v_store.read_page_corrected(i))
+                for i in range(self.k_store.n_pages)]
+            self._gf_stack = None
+        return self._gf_pages
+
+    def _fused_inputs(self):
+        """Stacked kernel operands: kpages/vpages (NB, 1, W, n) int32,
+        kscales/vscales (NB, 1) f32, valid (NB, B) int32 (frozen pages are
+        always full). Pre-padded to the `np_bucket` size with no-op zero
+        pages here — at freeze time, not per decode step — so the per-step
+        `attend_protected` call sees an already-bucketed page axis and
+        issues exactly one dispatch. Memoized between freezes."""
+        gf = self._refill_gf()
+        if self._gf_stack is None:
+            from repro.kernels.ops import np_bucket
+            code = self.k_store.code
+            NP, NB = len(gf), np_bucket(len(gf))
+            kp = jnp.zeros((NB, 1, self.words_per_page, code.n), jnp.int32)
+            vp = jnp.zeros_like(kp)
+            ks = vs = jnp.zeros((NB, 1), jnp.float32)
+            if gf:
+                kp = kp.at[:NP].set(jnp.stack([k for k, _ in gf])[:, None])
+                vp = vp.at[:NP].set(jnp.stack([v for _, v in gf])[:, None])
+                ks = ks.at[:NP, 0].set(jnp.asarray(
+                    [km.scale for km, _ in self._metas], jnp.float32))
+                vs = vs.at[:NP, 0].set(jnp.asarray(
+                    [vm.scale for _, vm in self._metas], jnp.float32))
+            valid = jnp.zeros((NB, self.batch), jnp.int32).at[:NP].set(
+                self.pkv.page_tokens)
+            self._gf_stack = (kp, vp, ks, vs, valid)
+        return self._gf_stack
+
+    def attend(self, q, softcap=0.0):
+        """Fused one-kernel read: corrected GF pages + scales + query ->
+        attention output via `ops.attend_protected` (desymbolize + dequant
+        + online softmax never leave the kernel). Falls back to the
+        streaming `pages()` path when fusion is off or reads are
+        uncorrected (the quality ablation reads raw levels, which only the
+        streaming path models)."""
+        if not (self.pkv.fused and self.pkv.corrected):
+            return super().attend(q, softcap)
+        if self.n_frozen == 0 and self.hot_len == 0:
+            raise ValueError("paged attention needs at least one KV page")
+        kp, vp, ks, vs, valid = self._fused_inputs()
+        code = self.k_store.code
+        from repro.kernels import ops
+        return ops.attend_protected(
+            q, kp, vp, ks, vs, valid, self.hot_k, self.hot_v,
+            jnp.full((self.batch,), self.hot_len, jnp.int32),
+            p=code.p, k_info=code.k, page_shape=self.page_shape,
+            softcap=float(softcap or 0.0), with_hot=self.hot_len > 0)
+
     # -- stats --------------------------------------------------------------
 
     def stats(self) -> dict:
@@ -288,9 +376,9 @@ class ProtectedKVCaches:
 
     # -- the _apply_block surface -------------------------------------------
 
-    def view(self, g: int, i: int) -> dict:
+    def view(self, g: int, i: int):
         if (g, i) in self.layers:
-            return {"paged": self.layers[(g, i)]}
+            return self.layers[(g, i)]           # a KVSource
         return self.dense[(g, i)]
 
     def update(self, g: int, i: int, new_cache: Optional[dict]) -> None:

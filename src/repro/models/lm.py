@@ -30,6 +30,7 @@ from repro.distributed.sharding import constrain
 from repro.nn import layers as L
 from repro.nn import moe as M
 from repro.nn import mamba as S
+from repro.nn.kv_source import KVSource
 from repro.nn.layers import CDT
 
 # ---------------------------------------------------------------------------
@@ -228,9 +229,12 @@ def _apply_block(bp, x, spec: LayerSpec, cfg: ArchConfig, *, positions,
         else:
             kv = None
             if cache is not None:
-                # a {"paged": ProtectedKVLayer} cache routes the layer
-                # through the protected paged-store read path
-                kv = (cache if "paged" in cache
+                # a KVSource cache (ProtectedKVLayer / the engine's batched
+                # layers) routes the layer through the protected paged read
+                # path; plain dicts are dense {"k","v"} decode caches (the
+                # legacy {"paged": ...} dict still passes through, and
+                # attention_apply warns + unwraps it)
+                kv = (cache if isinstance(cache, KVSource) or "paged" in cache
                       else {"k": cache["k"], "v": cache["v"]})
             y, nc = L.attention_apply(bp["attn"], h, spec, cfg,
                                       positions=positions, kv_cache=kv,

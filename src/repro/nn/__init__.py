@@ -1,4 +1,5 @@
 """NN substrate: attention/MLP/norm layers, MoE, Mamba blocks."""
+from .kv_source import KVSource
 from .layers import (rmsnorm, rope, init_mlp, mlp_apply, init_attention,
                      attention_apply, encoder_attention_apply, CDT)
 from .moe import init_moe, moe_apply, moe_dense, moe_sorted_ep

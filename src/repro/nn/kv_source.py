@@ -1,0 +1,53 @@
+"""KVSource — the decode-time KV provider protocol behind `attention_apply`.
+
+Decode-time attention used to route on cache *shape*: a plain
+``{"k", "v"}`` dict meant a dense ring buffer, while the magic
+``{"paged": layer}`` dict smuggled a protected paged layer through the same
+argument. That string-keyed routing is replaced by this protocol: anything
+that can append a step's K/V and be attended over implements `KVSource`,
+and `attention_apply` dispatches on `isinstance` instead of dict keys.
+
+Implementations in-tree:
+
+- `repro.models.kv.ProtectedKVLayer` — single-tenant protected paged K/V
+  (kind "protected"); its `attend` takes the fused one-kernel path when
+  `ProtectedKVConfig.fused` and falls back to the streaming per-page
+  online-softmax otherwise.
+- `repro.serving.engine.BatchedPagedKV` — the multi-tenant engine's
+  per-slot pool-backed pages (kind "protected").
+- `repro.serving.engine.BatchedDenseKV` — the engine's unprotected dense
+  baseline (kind "dense"), served through the default streaming attend.
+
+The default `attend` streams `pages()` through the page-granular
+online-softmax (`repro.nn.layers._attend_paged`), so a minimal source only
+has to provide `append` and `pages`; fused implementations override
+`attend` and keep `pages()` as the exact-parity reference path
+(tests/test_fused_attention.py asserts the two agree bitwise).
+"""
+from __future__ import annotations
+
+import abc
+
+
+class KVSource(abc.ABC):
+    """A decode-time KV provider `attention_apply` can attend over."""
+
+    #: coarse provenance tag ("dense" | "protected") for logging/stats
+    kind: str = "dense"
+
+    @abc.abstractmethod
+    def append(self, k, v) -> None:
+        """Ingest one step's (B, t, Hkv, D) K/V (RoPE already applied)."""
+
+    @abc.abstractmethod
+    def pages(self):
+        """Yield (k_page (B, T, Hkv, D), v_page, valid_tokens) steps for
+        the streaming online-softmax — the reference read path every
+        implementation keeps, fused or not."""
+
+    def attend(self, q, softcap=0.0):
+        """(B, Sq, Hq, D) query block -> attention output over this
+        source's K/V. Default: stream `pages()` through the page-granular
+        online-softmax; fused sources override."""
+        from .layers import _attend_paged
+        return _attend_paged(q, self.pages(), softcap)

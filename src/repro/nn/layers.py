@@ -9,6 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Optional
 
 import jax
@@ -16,6 +17,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, LayerSpec
 from repro.distributed.sharding import constrain
+from repro.nn.kv_source import KVSource
 
 ACTS = {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}
 CDT = jnp.bfloat16      # compute dtype
@@ -138,24 +140,15 @@ def _paged_attn_update(q, kpg, vpg, valid, m, l, acc, softcap=0.0):
     masked; a (B,) valid is the multi-tenant batched-slot path, where
     ragged sequences share one executable). Carries (m, l, acc) in fp32;
     fixed page shapes mean ONE cached executable serves every page of a
-    layer."""
-    B, Sq, Hq, D = q.shape
-    T, Hkv = kpg.shape[1], kpg.shape[2]
-    G = Hq // Hkv
-    qg = q.reshape(B, Sq, Hkv, G, D)
-    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kpg).astype(jnp.float32)
-    logits = _softcap(logits / jnp.sqrt(D).astype(jnp.float32), softcap)
-    ok = (jnp.arange(T)[None, None, None, None, :]
-          < jnp.reshape(valid, (-1, 1, 1, 1, 1)))
-    logits = jnp.where(ok, logits, -1e30)
-    pm = logits.max(axis=-1, keepdims=True)          # (B,Hkv,G,Sq,1)
-    new_m = jnp.maximum(m, pm)
-    w = jnp.exp(logits - new_m)
-    corr = jnp.exp(m - new_m)
-    new_l = corr * l + w.sum(axis=-1, keepdims=True)
-    new_acc = corr * acc + jnp.einsum(
-        "bhgqk,bkhd->bhgqd", w, vpg.astype(jnp.float32))
-    return new_m, new_l, new_acc
+    layer.
+
+    The math lives in `repro.kernels.ref.paged_softmax_update` — the same
+    recurrence the fused `attend_protected` oracle replays page-by-page —
+    so the streaming and fused protected read paths are bit-identical by
+    construction (tests/test_fused_attention.py)."""
+    from repro.kernels.ref import paged_softmax_update
+    return paged_softmax_update(q, kpg, vpg, valid, m, l, acc,
+                                softcap=softcap)
 
 
 def _attend_paged(q, pages, softcap):
@@ -194,11 +187,12 @@ def attention_apply(params, x, spec: LayerSpec, cfg: ArchConfig, *,
 
     Training/prefill: kv_cache None -> causal full pass, returns (y, new_cache
     or None). Decode: kv_cache dict {"k","v"} (B, Smax, Hkv, D) + cache_pos
-    scalar -> one-token update; a {"paged": ProtectedKVLayer} dict instead
-    routes the read through the protected paged store (append the token's
-    K/V — quantize + device-encode on page fill — then stream decoded pages
-    through the online-softmax `_attend_paged`, decode overlapping
-    attention). Cross: aux_kv = precomputed (k, v).
+    scalar -> one-token update; a `repro.nn.kv_source.KVSource` instead
+    routes the read through the source (append the token's K/V, then
+    `source.attend` — the protected paged layers take the fused one-kernel
+    GF-page attention path there, or stream decoded pages through
+    `_attend_paged`). The legacy {"paged": layer} dict form is deprecated
+    and unwraps to the same dispatch. Cross: aux_kv = precomputed (k, v).
     """
     B, S, _ = x.shape
     hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -206,7 +200,13 @@ def attention_apply(params, x, spec: LayerSpec, cfg: ArchConfig, *,
     q = constrain(q, "batch", None, "heads", None)
 
     new_cache = None
-    paged = kv_cache.get("paged") if isinstance(kv_cache, dict) else None
+    paged = kv_cache if isinstance(kv_cache, KVSource) else None
+    if paged is None and isinstance(kv_cache, dict) and "paged" in kv_cache:
+        warnings.warn(
+            'kv_cache={"paged": layer} is deprecated; pass the KVSource '
+            "layer itself. The dict form will be removed next release.",
+            DeprecationWarning, stacklevel=2)
+        paged = kv_cache["paged"]
     if spec.cross:
         k, v = aux_kv                                  # precomputed, cached
         mask = None
@@ -217,7 +217,7 @@ def attention_apply(params, x, spec: LayerSpec, cfg: ArchConfig, *,
         k = rope(k, positions, cfg.rope_theta)
         if paged is not None:
             paged.append(k.astype(CDT), v.astype(CDT))
-            out = _attend_paged(q, paged.pages(), cfg.softcap_attn)
+            out = paged.attend(q, cfg.softcap_attn)
             out = constrain(out, "batch", None, "heads", None)
             out = out.reshape(B, S, hq * dh)
             if pim_ctx is not None and "attn_o" in pim_ctx.targets:

@@ -35,8 +35,10 @@ protected datapath across many concurrent sequences:
 
 The engine drives the unmodified model stack: `repro.models.lm.decode_step`
 routes `EngineCaches` (duck-typed `ProtectedKVCaches` surface, (B,) per-slot
-positions) through the same `_apply_block` / `_attend_paged` code the
-single-tenant path uses.
+positions) through the same `_apply_block` / `KVSource.attend` code the
+single-tenant path uses — by default the fused GF-page attention kernel
+(`repro.kernels.ops.attend_protected`), with the streaming `_attend_paged`
+path as the exact-parity fallback.
 """
 from __future__ import annotations
 
@@ -53,6 +55,7 @@ from repro.memory.pool import (PoolExhausted, PooledStore, ProtectedPagePool)
 from repro.memory.paged import (dequantize_tensor, quantize_tensor,
                                 words_for_tensor)
 from repro.models.kv import ProtectedKVConfig
+from repro.nn.kv_source import KVSource
 from repro.nn.layers import CDT
 
 __all__ = ["BatchedPagedKV", "BatchedDenseKV", "EngineCaches",
@@ -68,17 +71,22 @@ def _scatter_rows(buf, rows, pos):
     )(buf, rows, pos)
 
 
-class BatchedPagedKV:
+class BatchedPagedKV(KVSource):
     """One attention layer's K/V for `max_active` slots: a shared dense hot
     page block with per-slot fill levels, and per-slot pool-backed frozen
     pages (`PooledStore` block tables into the shared pool).
 
     Slots freeze independently — when slot b's hot row reaches `page_tokens`
-    it alone is quantized + device-encoded into b's stores — and the read
-    path stacks per-slot decoded pages into (B, T, Hkv, D) steps for the
-    online-softmax, with a (B,) valid vector masking slots that have fewer
-    pages. Rows are computation-independent, so a slot's attention output
-    does not depend on the other slots' contents."""
+    it alone is quantized + device-encoded into b's stores. Implements
+    `KVSource`: the fused `attend` stacks per-slot *corrected GF codeword
+    pages* into (NP, B, W, n) kernel operands (empty slots contribute zero
+    pages with scale 0 and valid 0 — exact no-ops) and runs
+    `ops.attend_protected`; the streaming `pages()` path stacks decoded
+    (B, T, Hkv, D) steps for the per-page online-softmax and stays as the
+    exact-parity reference. Rows are computation-independent, so a slot's
+    attention output does not depend on the other slots' contents."""
+
+    kind = "protected"
 
     def __init__(self, pkv: ProtectedKVConfig, pool: ProtectedPagePool,
                  max_active: int, hkv: int, dh: int, dtype=CDT):
@@ -103,6 +111,10 @@ class BatchedPagedKV:
         self.metas: List[list] = [[] for _ in range(max_active)]
         self._decoded: List[list] = [[] for _ in range(max_active)]
         self._stack_cache: Optional[list] = None
+        # fused-path memos: per-slot corrected GF codeword pages and the
+        # stacked (NP, B, W, n) kernel operands built from them
+        self._gf_decoded: List[list] = [[] for _ in range(max_active)]
+        self._gf_stack_cache = None
         # which slots advance on append; the engine sets this each step
         self.active = np.zeros(max_active, bool)
 
@@ -116,7 +128,9 @@ class BatchedPagedKV:
         self.hot_len[b] = 0
         self.metas[b] = []
         self._decoded[b] = []
+        self._gf_decoded[b] = []
         self._stack_cache = None
+        self._gf_stack_cache = None
 
     def close_slot(self, b: int) -> dict:
         """Free the slot's pool blocks. Returns the slot's accumulated
@@ -132,7 +146,9 @@ class BatchedPagedKV:
         self.hot_len[b] = 0
         self.metas[b] = []
         self._decoded[b] = []
+        self._gf_decoded[b] = []
         self._stack_cache = None
+        self._gf_stack_cache = None
         return out
 
     # -- write path ---------------------------------------------------------
@@ -150,7 +166,13 @@ class BatchedPagedKV:
         self.metas[b].append((kmeta, vmeta))
         self._decoded[b].append((dequantize_tensor(kw, kmeta, p),
                                  dequantize_tensor(vw, vmeta, p)))
+        # fused-path write-through: the store page just written IS the
+        # corrected codeword page
+        j = self.k_stores[b].n_pages - 1
+        self._gf_decoded[b].append((self.k_stores[b].page(j),
+                                    self.v_stores[b].page(j)))
         self._stack_cache = None
+        self._gf_stack_cache = None
 
     def _freeze_slot(self, b: int) -> None:
         self._freeze_rows(b, self.hot_k[b:b + 1], self.hot_v[b:b + 1])
@@ -196,7 +218,9 @@ class BatchedPagedKV:
         the next read decodes through each slot's stores."""
         for b in range(self.max_active):
             self._decoded[b] = [None] * len(self.metas[b])
+            self._gf_decoded[b] = [None] * len(self.metas[b])
         self._stack_cache = None
+        self._gf_stack_cache = None
 
     def _decoded_page(self, b: int, j: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
         ent = self._decoded[b][j]
@@ -242,6 +266,85 @@ class BatchedPagedKV:
         yield from self._stack_cache
         yield (self.hot_k, self.hot_v, jnp.asarray(self.hot_len, jnp.int32))
 
+    # -- fused read path ----------------------------------------------------
+
+    def _gf_page(self, b: int, j: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Slot b's corrected GF codeword page j (scan-gated decode through
+        the slot's stores, corrections attributed to the owning tenant)."""
+        ent = self._gf_decoded[b][j]
+        if ent is None:
+            ent = (self.k_stores[b].read_page_corrected(j),
+                   self.v_stores[b].read_page_corrected(j))
+            self._gf_decoded[b][j] = ent
+        return ent
+
+    def _fused_inputs(self):
+        """Stacked kernel operands: kpages/vpages (NP, B, W, n) int32,
+        kscales/vscales (NP, B) f32, valid (NP, B) int32. Page step j
+        stacks slot b's page j; slots with fewer pages contribute zero
+        pages (valid codewords) with scale 0 and valid 0 — exact no-ops in
+        the recurrence. Memoized between freezes."""
+        max_pg = max((len(m) for m in self.metas), default=0)
+        if (self._gf_stack_cache is None
+                or self._gf_stack_cache[0] != max_pg):
+            W, n = self.words_per_page, self.code.n
+            zero_pg = jnp.zeros((W, n), jnp.int32)
+            zero_sc = jnp.zeros((), jnp.float32)
+            steps = []
+            for j in range(max_pg):
+                kps, vps, kss, vss, valid = [], [], [], [], []
+                for b in range(self.max_active):
+                    if j < len(self.metas[b]):
+                        kpg, vpg = self._gf_page(b, j)
+                        kmeta, vmeta = self.metas[b][j]
+                        kps.append(kpg)
+                        vps.append(vpg)
+                        kss.append(jnp.asarray(kmeta.scale, jnp.float32))
+                        vss.append(jnp.asarray(vmeta.scale, jnp.float32))
+                        valid.append(self.T)
+                    else:
+                        kps.append(zero_pg)
+                        vps.append(zero_pg)
+                        kss.append(zero_sc)
+                        vss.append(zero_sc)
+                        valid.append(0)
+                steps.append((jnp.stack(kps), jnp.stack(vps),
+                              jnp.stack(kss), jnp.stack(vss),
+                              jnp.asarray(valid, jnp.int32)))
+            # pre-pad the page axis to its np_bucket size with no-op zero
+            # pages here (once per freeze), so the per-step
+            # attend_protected call pads nothing and issues one dispatch
+            from repro.kernels.ops import np_bucket
+            B = self.max_active
+            NB = np_bucket(max_pg)
+            ops_in = (jnp.zeros((NB, B, W, n), jnp.int32),
+                      jnp.zeros((NB, B, W, n), jnp.int32),
+                      jnp.zeros((NB, B), jnp.float32),
+                      jnp.zeros((NB, B), jnp.float32),
+                      jnp.zeros((NB, B), jnp.int32))
+            if steps:
+                ops_in = tuple(
+                    z.at[:max_pg].set(jnp.stack([s[i] for s in steps]))
+                    for i, z in enumerate(ops_in))
+            self._gf_stack_cache = (max_pg, ops_in)
+        return self._gf_stack_cache[1]
+
+    def attend(self, q, softcap=0.0):
+        """Fused one-kernel batched read (`ops.attend_protected` over the
+        per-slot GF page stacks; the shared hot block is applied inside the
+        kernel with per-slot fill levels). Streams `pages()` through the
+        per-page online-softmax when fusion is off or reads are
+        uncorrected."""
+        if not (self.pkv.fused and self.pkv.corrected):
+            return super().attend(q, softcap)
+        kp, vp, ks, vs, valid = self._fused_inputs()
+        from repro.kernels import ops
+        return ops.attend_protected(
+            q, kp, vp, ks, vs, valid, self.hot_k, self.hot_v,
+            jnp.asarray(self.hot_len, jnp.int32),
+            p=self.code.p, k_info=self.code.k, page_shape=self.page_shape,
+            softcap=float(softcap or 0.0), with_hot=True)
+
     # -- capacity -----------------------------------------------------------
 
     def freeze_candidates(self, active: np.ndarray) -> int:
@@ -258,10 +361,13 @@ class BatchedPagedKV:
         return out
 
 
-class BatchedDenseKV:
+class BatchedDenseKV(KVSource):
     """The unprotected baseline: per-slot dense K/V rows in one
-    (max_active, max_seq, Hkv, D) buffer, served through the same pages()
-    interface (a single page step with per-slot valid lengths)."""
+    (max_active, max_seq, Hkv, D) buffer, served through the same
+    `KVSource` interface (a single `pages()` step with per-slot valid
+    lengths, attended via the default streaming path)."""
+
+    kind = "dense"
 
     def __init__(self, max_active: int, max_seq: int, hkv: int, dh: int,
                  dtype=CDT):
@@ -319,8 +425,8 @@ class EngineCaches:
         self.cfg = cfg
         self.layers = layers
 
-    def view(self, g: int, i: int) -> dict:
-        return {"paged": self.layers[(g, i)]}
+    def view(self, g: int, i: int):
+        return self.layers[(g, i)]               # a KVSource
 
     def update(self, g: int, i: int, new_cache) -> None:
         return None

@@ -16,8 +16,15 @@ Three measurement families:
   (unprotected) reads, against the clean-quantized reference. Protection
   must be strictly closer to the reference.
 
+A fourth **telemetry** section replays a short corrupted serve under the
+ambient observability layer (`repro.obs`): KV freeze/inject events land in
+a Chrome trace, detection counters and RAS estimates land in a metrics
+snapshot, and both are written as artifacts when `--trace` / `--metrics`
+paths are given.
+
 CLI:  PYTHONPATH=src python -m benchmarks.bench_kv_serving
         [--quick] [--json PATH] [--rows PATH]
+        [--trace PATH] [--metrics PATH]
 """
 from __future__ import annotations
 
@@ -307,7 +314,80 @@ def _quality_rows(quick: bool, code_name: str, raw_bers):
     return rows
 
 
-def main(quick: bool = False):
+# ---------------------------------------------------------------------------
+# telemetry: metrics snapshot + Chrome trace artifact for a corrupted serve
+# ---------------------------------------------------------------------------
+
+
+def _telemetry_rows(quick: bool, code_name: str, trace_path, metrics_path):
+    """Short corrupted protected serve under the ambient observability
+    layer. Freeze spans and inject markers from `repro.models.kv` land in
+    the trace; a post-serve corrected sweep of every page feeds the
+    detection counters and the RAS estimator; both exports are validated
+    (and written when paths were given)."""
+    from repro import obs
+
+    cfg, params, prompts, cont, page_tokens = _setup(quick)
+    B, S = prompts.shape
+    gen = min(cont.shape[1], 4)
+    max_seq = S + cont.shape[1] + 1
+    code = get_code(code_name)
+    pkv = ProtectedKVConfig(code_name=code_name, page_tokens=page_tokens)
+
+    reg = obs.MetricsRegistry()
+    tr = obs.Tracer()
+    est = obs.ErrorRateEstimator()
+    with obs.use_metrics(reg), obs.use_tracer(tr), obs.use_estimator(est):
+        _lg, pc = prefill(params, cfg, prompts, protected_kv=pkv,
+                          max_seq=max_seq)
+        pc.inject(asymmetric_adjacent(code.p, 1e-3, 1e-3), key=3)
+        with obs.span("kv_serving.serve", gen=gen):
+            _serve(params, cfg, pc, prompts, cont[:, :gen])
+        # scrub-style corrected sweep: every live page of every store goes
+        # through the instrumented read path, so mem_detected/corrected and
+        # the estimator's flag/stress EWMAs reflect the injected channel
+        with obs.span("kv_serving.sweep"):
+            for layer in pc.layers.values():
+                for store in (layer.k_store, layer.v_store):
+                    for i in range(store.n_pages):
+                        store.read_page_corrected(i)
+        est.publish(reg)
+
+    snap = reg.snapshot()
+    trace_doc = tr.to_chrome_trace(trace_path)
+    trace_ok = bool(json.loads(json.dumps(trace_doc))["traceEvents"]
+                    == trace_doc["traceEvents"])
+    if metrics_path:
+        reg.append_jsonl(metrics_path,
+                         meta={"bench": "kv_serving", "section": "telemetry"})
+
+    def total(name):
+        ent = snap.get(name, {"series": []})
+        return sum(r.get("value", 0.0) for r in ent["series"])
+
+    detected, corrected = total("mem_detected"), total("mem_corrected")
+    frozen = total("kv_pages_frozen")
+    injected = total("kv_cells_injected")
+    freeze_spans = len(tr.spans("kv.freeze"))
+    ras = est.snapshot()
+    seen = sum(e["words_seen"] for e in ras.values())
+    flagged = sum(e["words_flagged"] for e in ras.values())
+    row = {"section": "telemetry", "code": code_name,
+           "pages_frozen": int(frozen),
+           "cells_injected": int(injected),
+           "detected": int(detected), "corrected": int(corrected),
+           "freeze_spans": freeze_spans,
+           "trace_events": len(trace_doc["traceEvents"]),
+           "ras_regions": len(ras),
+           "ras_flag_rate": round(flagged / seen, 6) if seen else 0.0,
+           "pass": bool(trace_ok and frozen > 0 and freeze_spans > 0
+                        and injected > 0 and detected > 0
+                        and corrected >= detected * 0.5
+                        and flagged > 0 and snap)}
+    return [row]
+
+
+def main(quick: bool = False, trace_path=None, metrics_path=None):
     code_name = "wl160_r08"
     rows = _parity_rows(n_words=16 if quick else 48)
     tput, (tps_dense, tps_prot, tps_unfused, fused_bitexact, lat) = \
@@ -316,6 +396,8 @@ def main(quick: bool = False):
     raw_bers = [1e-2] if quick else [1e-2, 1e-3]
     qual = _quality_rows(quick, code_name, raw_bers)
     rows += qual
+    tel = _telemetry_rows(quick, code_name, trace_path, metrics_path)
+    rows += tel
     at = next(r for r in qual if r["raw_ber"] == 1e-2)
     rows.append({
         "section": "acceptance", "code": code_name,
@@ -325,12 +407,14 @@ def main(quick: bool = False):
         "overlap_speedup": round(lat["sync"] / lat["overlap"], 3),
         "ppl_delta_protected": at["ppl_delta_protected"],
         "ppl_delta_unprotected": at["ppl_delta_unprotected"],
+        "telemetry_pass": tel[0]["pass"],
         "pass": bool(tps_prot * 2 >= tps_dense
                      and tps_prot > tps_unfused
                      and fused_bitexact
                      and lat["overlap"] < lat["sync"]
                      and at["ppl_delta_protected"]
-                     < at["ppl_delta_unprotected"]),
+                     < at["ppl_delta_unprotected"]
+                     and tel[0]["pass"]),
     })
     return rows
 
@@ -343,11 +427,16 @@ if __name__ == "__main__":
                     help="write measurement rows as JSON")
     ap.add_argument("--rows", default=DEFAULT_PATH, metavar="PATH",
                     help="append standardized rows here ('' disables)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write the telemetry section's Chrome trace JSON")
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="append the telemetry metrics snapshot (JSONL)")
     args = ap.parse_args()
     if args.json:        # fail fast on an unwritable path, not after minutes
         with open(args.json, "a"):
             pass
-    out = main(quick=args.quick)
+    out = main(quick=args.quick, trace_path=args.trace,
+               metrics_path=args.metrics)
     for row in out:
         print(row)
     if args.json:

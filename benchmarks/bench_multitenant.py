@@ -15,9 +15,20 @@ Measurement families:
 - **scrub overhead** — the same noisy 16-way run with background pool
   scrubbing interleaved between steps (bounded cold-page sweeps) must keep
   >= 80% of the no-scrub aggregate throughput (acceptance: < 20% cost).
+- **telemetry** — the same noisy 16-way scrubbing run with the full
+  `repro.obs` stack installed (metrics registry + span tracer) vs telemetry
+  off: aggregate tokens/s with telemetry on must stay >= 0.97x off
+  (best-of-2 timed reps each side to defeat scheduler noise), the exported
+  snapshot's per-tenant corrected gauges must equal `tenant_stats`, and the
+  Chrome-trace JSON must round-trip `json.loads` with >= 1 `engine.step`
+  span per step. A separate unmeasured rep runs the RAS-estimator-driven
+  scrub schedule (adaptive interval + flag-hot page prioritization) and
+  reports what it did. `--trace` / `--metrics` write the trace JSON and
+  metrics JSONL artifacts.
 
 CLI:  PYTHONPATH=src python -m benchmarks.bench_multitenant
         [--quick] [--json PATH] [--rows PATH]
+        [--trace PATH] [--metrics PATH]
 """
 from __future__ import annotations
 
@@ -28,6 +39,7 @@ import time
 import jax
 import numpy as np
 
+from repro import obs
 from repro.configs import get_config
 from repro.core import get_code
 from repro.memory import ProtectedPagePool, asymmetric_adjacent
@@ -105,7 +117,7 @@ def _p99_ms(lats) -> float:
     return round(float(np.percentile(np.asarray(lats) * 1e3, 99)), 2)
 
 
-def main(quick: bool = False):
+def main(quick: bool = False, trace_path=None, metrics_path=None):
     cfg, params, prompts, gen, page_tokens, counts = _setup(quick)
     n_layers = cfg.n_groups * len(cfg.group_spec)
     pages_per_seq = -(-(len(prompts[0]) + gen) // page_tokens)
@@ -220,6 +232,84 @@ def main(quick: bool = False):
         "outputs_match_no_scrub": bool(scrub_outputs_match),
     })
 
+    # telemetry overhead + artifact validity: the scrub-shaped noisy run
+    # with the observation pillars installed vs off. Timed best-of-2 per
+    # side (full-generation runs; the scrub section already warmed this
+    # exact engine shape). The estimator rides in a separate unmeasured
+    # rep because it CHANGES the scrub schedule (adaptive interval,
+    # prioritized page order) — a behavior change, not observation cost.
+    def _telemetry_rep(telemetry: bool):
+        eng = _engine(params, cfg, n_scrub, gen, page_tokens,
+                      protected=True, pool=pool, scrub=True)
+        if not telemetry:
+            res, tokens, dt, lats = _timed_run(
+                eng, prompts[:n_scrub], gen, inject_eps=2e-4,
+                inject_steps=(2, 5))
+            return eng, res, tokens / dt, lats, None, None
+        reg, tr = obs.MetricsRegistry(), obs.Tracer()
+        with obs.use_metrics(reg), obs.use_tracer(tr):
+            res, tokens, dt, lats = _timed_run(
+                eng, prompts[:n_scrub], gen, inject_eps=2e-4,
+                inject_steps=(2, 5))
+        eng.publish_metrics(reg)
+        return eng, res, tokens / dt, lats, reg, tr
+
+    off = max((_telemetry_rep(False) for _ in range(2)),
+              key=lambda r: r[2])
+    on = max((_telemetry_rep(True) for _ in range(2)),
+             key=lambda r: r[2])
+    eng_on, res_on, tps_on, lats_on, reg_on, tr_on = on
+    tps_off_t = off[2]
+    steps_on = len(lats_on)
+    snap = reg_on.snapshot()
+    trace_doc = tr_on.to_chrome_trace(trace_path)
+    trace_ok = (json.loads(json.dumps(trace_doc))["traceEvents"]
+                == trace_doc["traceEvents"])
+    step_spans = len(tr_on.spans("engine.step"))
+    tenant_gauges_match = all(
+        obs.MetricsRegistry.value(snap, "tenant_corrected",
+                                  layer="engine", tenant=str(t))
+        == eng_on.tenant_stats(t)["corrected"]
+        for t in range(n_scrub))
+    corrected_total = sum(eng_on.tenant_stats(t)["corrected"]
+                          for t in range(n_scrub))
+    if metrics_path:
+        reg_on.append_jsonl(metrics_path,
+                            meta={"bench": "multitenant",
+                                  "section": "telemetry"})
+
+    # estimator-driven scrub demo (unmeasured): adaptive interval +
+    # flag-hot prioritization, reported, not timed
+    est = obs.ErrorRateEstimator()
+    eng_est = _engine(params, cfg, n_scrub, gen, page_tokens,
+                      protected=True, pool=pool, scrub=True)
+    rounds0 = pool.stats.scrub_rounds
+    with obs.use_estimator(est):
+        res_est, *_ = _timed_run(eng_est, prompts[:n_scrub], gen,
+                                 inject_eps=2e-4, inject_steps=(2, 5))
+        adaptive_interval = est.adaptive_interval(2)
+    est_rounds = pool.stats.scrub_rounds - rounds0
+    est_snap = est.snapshot()
+    telemetry_ratio = tps_on / tps_off_t
+    rows.append({
+        "section": "telemetry", "sequences": n_scrub,
+        "tokens_per_s_off": round(tps_off_t, 2),
+        "tokens_per_s_on": round(tps_on, 2),
+        "telemetry_ratio": round(telemetry_ratio, 4),
+        "steps": steps_on, "engine_step_spans": step_spans,
+        "trace_json_valid": bool(trace_ok),
+        "tenant_corrected_gauges_match": bool(tenant_gauges_match),
+        "corrected_total": int(corrected_total),
+        "outputs_match_off": bool(res_on == off[1]),
+        "estimator_scrub_rounds": est_rounds,
+        "estimator_adaptive_interval": adaptive_interval,
+        "estimator_regions": len(est_snap),
+        "pass": bool(telemetry_ratio >= 0.97 and trace_ok
+                     and step_spans >= steps_on
+                     and tenant_gauges_match),
+    })
+    telemetry_pass = rows[-1]["pass"]
+
     scaling = tps[(hi, "protected")] / tps[(1, "protected")]
     rows.append({
         "section": "acceptance", "code": CODE_NAME,
@@ -231,8 +321,11 @@ def main(quick: bool = False):
         "fused_speedup": round(fused_speedup, 3),
         "fused_outputs_match": bool(fused_match),
         "scrub_cost_frac": round(scrub_cost, 4),
+        "telemetry_ratio": round(telemetry_ratio, 4),
+        "telemetry_pass": bool(telemetry_pass),
         "pass": bool(scaling >= 2.0 and bit_exact and scrub_cost < 0.2
-                     and fused_match and scrub_outputs_match),
+                     and fused_match and scrub_outputs_match
+                     and telemetry_pass),
     })
     return rows
 
@@ -245,11 +338,18 @@ if __name__ == "__main__":
                     help="write measurement rows as JSON")
     ap.add_argument("--rows", default=DEFAULT_PATH, metavar="PATH",
                     help="append standardized rows here ('' disables)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write the telemetry run's Chrome trace JSON here "
+                         "(open in ui.perfetto.dev)")
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="append the telemetry run's metrics snapshot as "
+                         "one JSONL record here")
     args = ap.parse_args()
     if args.json:        # fail fast on an unwritable path, not after minutes
         with open(args.json, "a"):
             pass
-    out = main(quick=args.quick)
+    out = main(quick=args.quick, trace_path=args.trace,
+               metrics_path=args.metrics)
     for row in out:
         print(row)
     if args.json:

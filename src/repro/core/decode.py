@@ -328,4 +328,23 @@ def decode_integers(code: LDPCCode, y: jnp.ndarray, *, n_iters: int = 10,
     res = decode_llv(code, prior, n_iters=n_iters, early_exit=early_exit,
                      damping=damping, cn_fbp=cn_fbp)
     y_corr = reinterpret(y, res.symbols, code.p)
+    _observe_decode(res, n_iters)
     return y_corr, res
+
+
+def _observe_decode(res, n_iters: int) -> None:
+    """Feed an eager decode's iteration/fail telemetry to the ambient RAS
+    estimator. `decode_integers` usually runs under `jax.jit`, where the
+    result fields are tracers — observation must happen at the eager call
+    sites that see concrete values (the memory controller and page stores
+    do their own feeding there), so tracer values are skipped outright."""
+    from repro.obs import ras as obs_ras
+    est = obs_ras.current()
+    if not est.enabled:
+        return
+    iters = getattr(res, "iterations", None)
+    if iters is None or isinstance(iters, jax.core.Tracer) \
+            or isinstance(res.detect_fail, jax.core.Tracer):
+        return
+    est.observe_decode(np.asarray(iters), n_iters,
+                       detect_fail=np.asarray(res.detect_fail))

@@ -21,7 +21,9 @@ gathered into fixed-size chunks so one jitted executable serves every read
 counters (detected / corrected / uncorrectable / writebacks / scrub
 bandwidth) live in `ControllerStats`.
 
-The scan itself has two backends (`scan_backend=`):
+The scan itself has two routes, selected by the controller's pinned
+`KernelPolicy` (`policy=`) or the ambient `repro.kernels.use_policy` —
+`ref` mode runs the host scan, every other mode the device scan:
 
 - **host** — float32 BLAS matmul (exact while n·(p−1)² < 2²⁴; beyond that
   it degrades to an exact-but-slower int64 path automatically);
@@ -30,9 +32,13 @@ The scan itself has two backends (`scan_backend=`):
   mask crosses back to the host, never the syndrome matrix. Pages are
   streamed through ONE cached fixed-shape executable (`scan_block` rows)
   and fanned across local devices via the `decode_sharded` mesh when more
-  than one is visible.
-- **auto** (default) — device on TPU, host elsewhere (interpret-mode Pallas
-  on CPU is a correctness path, not a fast path).
+  than one is visible. The default `auto` mode compiles on TPU and
+  interprets elsewhere (a correctness path, not a fast path, on CPU).
+
+Every read and sweep also feeds the ambient observability layer
+(`repro.obs`): correction counters into the metrics registry, per-page
+scan-flag rates and decoder iteration vectors into the RAS estimator —
+both free no-ops unless `use_metrics` / `use_estimator` is active.
 
 Scrubbing is **paged**: `scrub(page_words=...)` streams fixed-size pages of
 stored words (`scrub_pages` accepts any iterator of writable (b, n) row
@@ -51,6 +57,8 @@ import numpy as np
 
 from repro.core.construction import LDPCCode
 from repro.core.decode import decode_integers
+from repro.obs import metrics as obs_metrics
+from repro.obs import ras as obs_ras
 
 __all__ = ["ControllerStats", "MemoryController", "WritebackController",
            "ScrubController", "make_controller"]
@@ -78,6 +86,8 @@ class ControllerStats:
     scrub_uncorrectable: int = 0
     scrub_seconds: float = 0.0
 
+    CORRECTION_KEYS = ("detected", "corrected", "uncorrectable")
+
     @property
     def scrub_bandwidth_cells_per_s(self) -> float:
         return self.scrub_cells / self.scrub_seconds if self.scrub_seconds \
@@ -88,6 +98,40 @@ class ControllerStats:
         d["scrub_bandwidth_cells_per_s"] = self.scrub_bandwidth_cells_per_s
         return d
 
+    def merge(self, other: "ControllerStats") -> "ControllerStats":
+        """Accumulate another stats block into this one (all counters sum;
+        returns self so merges chain)."""
+        for f in dataclasses.fields(self):
+            setattr(self, f.name,
+                    getattr(self, f.name) + getattr(other, f.name))
+        return self
+
+    def correction_counts(self) -> Dict[str, int]:
+        """The read-path correction triple every per-tenant report uses."""
+        return {k: getattr(self, k) for k in self.CORRECTION_KEYS}
+
+    @staticmethod
+    def add_counts(out: Dict[str, int], src) -> Dict[str, int]:
+        """Add one correction-count source (a `ControllerStats` or any dict
+        holding the triple) into `out` in place. The single merge helper
+        behind every detected/corrected/uncorrectable summation in the
+        serving layer — see `ServingEngine.tenant_stats`."""
+        get = src.correction_counts().get if isinstance(
+            src, ControllerStats) else src.get
+        for k in ControllerStats.CORRECTION_KEYS:
+            out[k] = out.get(k, 0) + int(get(k, 0))
+        return out
+
+    def publish(self, registry, **labels) -> None:
+        """Export every counter into a `MetricsRegistry` as gauges (the
+        stats are already cumulative totals, so gauge-set is idempotent
+        across repeated publishes — counter-inc would double count)."""
+        if registry is None or not getattr(registry, "enabled", False):
+            return
+        for f in dataclasses.fields(self):
+            registry.gauge(f"controller_{f.name}", **labels).set(
+                getattr(self, f.name))
+
 
 class MemoryController:
     """`basic` policy: correct-on-read, storage untouched."""
@@ -97,23 +141,15 @@ class MemoryController:
     def __init__(self, *, n_iters: int = 10, damping: float = 0.3,
                  llv_scale: float = 4.0, llv_mode: str = "manhattan",
                  chunk_size: int = 256, use_sharded: Optional[bool] = None,
-                 scan_backend: Optional[str] = None, scan_block: int = 512,
+                 scan_block: int = 512,
                  page_words: Optional[int] = None, policy=None):
-        if scan_backend is not None:
-            import warnings
-            warnings.warn(
-                "MemoryController(scan_backend=...) is deprecated; pass "
-                "policy=repro.kernels.KernelPolicy(mode) or set the ambient "
-                "policy with repro.kernels.use_policy. The scan_backend "
-                "keyword will be removed next release.",
-                DeprecationWarning, stacklevel=2)
-            if policy is None:
-                from repro.kernels.backend import policy_from_scan_backend
-                policy = policy_from_scan_backend(scan_backend)
+        # `policy=` pins a KernelPolicy for this controller's scans; the
+        # class-level `policy` name ("basic"/"writeback"/"scrub") stays the
+        # policy *name*, so scrub reports label themselves correctly
         if policy is not None:
             from repro.kernels.backend import _as_policy
             policy = _as_policy(policy)
-        self.policy = policy
+        self.kernel_policy = policy
         self.n_iters = n_iters
         self.damping = damping
         self.llv_scale = llv_scale
@@ -121,8 +157,6 @@ class MemoryController:
         self.chunk_size = chunk_size
         self.use_sharded = (len(jax.devices()) > 1 if use_sharded is None
                             else use_sharded)
-        self.scan_backend = scan_backend if scan_backend is not None \
-            else "auto"
         self.scan_block = scan_block
         self.page_words = page_words          # default paging for sweeps
         self.stats = ControllerStats()
@@ -174,6 +208,7 @@ class MemoryController:
         """Decode (B, n) stored level-words -> (symbols (B, n), fail (B,)).
         Chunks are padded to `chunk_size` so one executable serves any B."""
         fn = self._decoder(code)
+        est = obs_ras.current()
         B = words.shape[0]
         cs = self.chunk_size
         syms = np.empty((B, code.n), np.int64)
@@ -183,6 +218,13 @@ class MemoryController:
             _y, res = fn(jnp.asarray(chunk))
             syms[lo:lo + b] = np.asarray(res.symbols[:b])
             fail[lo:lo + b] = np.asarray(res.detect_fail[:b])
+            if est.enabled:
+                # outputs are concrete here (jitted executable, eager call)
+                # — feed decoder-stress/fail telemetry to the RAS estimator
+                iters = getattr(res, "iterations", None)
+                if iters is not None:
+                    est.observe_decode(np.asarray(iters)[:b], self.n_iters,
+                                       detect_fail=fail[lo:lo + b])
         return syms, fail
 
     # -- syndrome-scan backends ---------------------------------------------
@@ -191,7 +233,7 @@ class MemoryController:
         """Resolved kernel mode for scans: the controller's pinned policy,
         else the ambient one."""
         from repro.kernels.backend import current_policy
-        return (self.policy or current_policy()).resolve()
+        return (self.kernel_policy or current_policy()).resolve()
 
     def resolved_scan_backend(self) -> str:
         # "ref" mode is the host BLAS/int64 scan; compiled and interpret
@@ -300,11 +342,24 @@ class MemoryController:
     def read(self, code: LDPCCode, store: dict, name: str) -> np.ndarray:
         st = store[name]
         out, flagged, fail = self._correct(code, st.enc)
+        n_flagged = int(flagged.sum())
+        n_fail = int(fail.sum())
         self.stats.reads += 1
         self.stats.words_read += st.enc.shape[0]
-        self.stats.detected += int(flagged.sum())
-        self.stats.corrected += int((flagged & ~fail).sum())
-        self.stats.uncorrectable += int(fail.sum())
+        self.stats.detected += n_flagged
+        self.stats.corrected += n_flagged - n_fail
+        self.stats.uncorrectable += n_fail
+        reg = obs_metrics.current()
+        if reg.enabled:
+            labels = {"layer": "controller", "policy": self.policy,
+                      "code": f"gf{code.p}n{code.n}"}
+            reg.counter("mem_words_read", **labels).inc(st.enc.shape[0])
+            reg.counter("mem_detected", **labels).inc(n_flagged)
+            reg.counter("mem_corrected", **labels).inc(n_flagged - n_fail)
+            reg.counter("mem_uncorrectable", **labels).inc(n_fail)
+        est = obs_ras.current()
+        if est.enabled:
+            est.observe_scan(n_flagged, st.enc.shape[0], n_symbols=code.n)
         self._writeback(st, out, flagged, fail)
         return out
 
@@ -357,7 +412,7 @@ class MemoryController:
                     page_words: Optional[int] = None) -> dict:
         """Paged sweep over any iterator of writable (b, n) level-word
         pages: scan each page (host BLAS or the fused device kernel, per
-        `scan_backend`), batch-decode only the flagged words, and write
+        the resolved kernel policy), batch-decode only the flagged words, and write
         repairs back through the page views. One cached scan executable and
         one cached decode executable serve every page, so the stream never
         recompiles; pages are consumed lazily (one page resident at a
@@ -365,6 +420,8 @@ class MemoryController:
         t0 = time.perf_counter()
         words = flagged_n = corrected_n = fail_n = n_pages = 0
         page_stats = []
+        est = obs_ras.current()
+        reg = obs_metrics.current()
         for page in pages:
             n_pages += 1
             tp = time.perf_counter()
@@ -384,6 +441,13 @@ class MemoryController:
             flagged_n += pg_flagged
             corrected_n += pg_flagged - pg_fail
             fail_n += pg_fail
+            if est.enabled:
+                est.observe_scan(pg_flagged, page.shape[0],
+                                 n_symbols=code.n)
+            if reg.enabled:
+                reg.histogram("scrub_page_seconds",
+                              layer="controller").observe(
+                    time.perf_counter() - tp)
             if n_pages <= MAX_PAGE_STATS:
                 page_stats.append({
                     "words": int(page.shape[0]), "flagged": pg_flagged,
@@ -397,6 +461,12 @@ class MemoryController:
         self.stats.scrub_corrected += corrected_n
         self.stats.scrub_uncorrectable += fail_n
         self.stats.scrub_seconds += dt
+        if reg.enabled:
+            labels = {"layer": "controller", "policy": self.policy,
+                      "code": f"gf{code.p}n{code.n}"}
+            reg.counter("scrub_words_scanned", **labels).inc(words)
+            reg.counter("scrub_corrected", **labels).inc(corrected_n)
+            reg.counter("scrub_uncorrectable", **labels).inc(fail_n)
         return {"policy": self.policy, "backend": self._scan_route(code),
                 "words_scanned": words,
                 "cells_scanned": words * code.n, "flagged": flagged_n,

@@ -41,6 +41,8 @@ from repro.core import get_code
 from repro.core.construction import LDPCCode
 from repro.core.decode import decode_integers
 from repro.core.protected import decode_pipelined, np_prod_mesh
+from repro.obs import metrics as obs_metrics
+from repro.obs import ras as obs_ras
 
 from .channel import Channel
 from .controller import ControllerStats
@@ -120,18 +122,7 @@ class PagedProtectedStore:
                  page_words: int = 256, mesh=None, n_iters: int = 10,
                  damping: float = 0.3, llv_scale: float = 4.0,
                  llv_mode: str = "manhattan", key: int = 0,
-                 backend: str | None = None, policy=None):
-        if backend is not None:
-            import warnings
-            warnings.warn(
-                "PagedProtectedStore(backend=...) is deprecated; pass "
-                "policy=repro.kernels.KernelPolicy(mode) or set the ambient "
-                "policy with repro.kernels.use_policy. The backend keyword "
-                "will be removed next release.",
-                DeprecationWarning, stacklevel=2)
-            if policy is None:
-                from repro.kernels.backend import policy_from_store_backend
-                policy = policy_from_store_backend(backend)
+                 policy=None):
         self.code = get_code(code) if isinstance(code, str) else code
         # Backend selection is one KernelPolicy (repro.kernels.backend):
         # None defers to the ambient policy at executable-build time —
@@ -142,7 +133,6 @@ class PagedProtectedStore:
             from repro.kernels.backend import _as_policy
             policy = _as_policy(policy)
         self.policy = policy
-        self.backend = backend if backend is not None else "auto"
         if page_words <= 0:
             raise ValueError(f"page_words must be positive, got {page_words}")
         if mesh is not None:
@@ -445,6 +435,12 @@ class PagedProtectedStore:
         self.stats.words_read += self.page_words
         flags = np.asarray(self._scanner()(page))
         nf = int(flags.sum())
+        est = obs_ras.current()
+        owner = getattr(self, "owner", None)
+        region = str(owner) if owner is not None else ""
+        if est.enabled:
+            est.observe_scan(nf, self.page_words, n_symbols=self.code.n,
+                             region=region)
         if not nf:
             return page
         self.stats.detected += nf
@@ -452,6 +448,19 @@ class PagedProtectedStore:
         bad = int((flags & np.asarray(res.detect_fail)).sum())
         self.stats.uncorrectable += bad
         self.stats.corrected += nf - bad
+        reg = obs_metrics.current()
+        if reg.enabled:
+            lab = {"layer": "paged", "tenant": region,
+                   "code": f"gf{self.code.p}n{self.code.n}"}
+            reg.counter("mem_detected", **lab).inc(nf)
+            reg.counter("mem_corrected", **lab).inc(nf - bad)
+            reg.counter("mem_uncorrectable", **lab).inc(bad)
+        if est.enabled:
+            iters = getattr(res, "iterations", None)
+            if iters is not None:
+                est.observe_decode(iters, self.n_iters,
+                                   detect_fail=res.detect_fail,
+                                   region=region)
         return res.symbols
 
     def read_corrected(self) -> jnp.ndarray:

@@ -9,9 +9,13 @@ tenant's pages. This module supplies the vLLM-style layer underneath:
 - **`ProtectedPagePool`** — a fixed capacity of `(page_words, n)` GF-level
   pages with a free list, reference counts (so prefix-shared sequences can
   alias blocks), per-page owner labels and last-touch stamps (LRU / cold
-  selection), and an incremental round-robin `scrub()` that sweeps cold
-  pages with the same fused scan -> gated decode -> writeback path the
-  stores use, attributing repairs to the owning tenant.
+  selection), and an incremental `scrub()` that sweeps cold pages with the
+  same fused scan -> gated decode -> writeback path the stores use,
+  attributing repairs to the owning tenant. The sweep order is round-robin
+  by default, or flag-EWMA-prioritized (`prioritize=True`) so a small page
+  budget lands on hot-flagging pages — the estimator-driven schedule
+  `repro.serving.ServingEngine` drives via
+  `repro.obs.ErrorRateEstimator.adaptive_interval`.
 - **`PooledStore`** — a `PagedProtectedStore` subclass whose storage
   primitives address the pool through a per-tenant **block table** instead
   of a private list. Writes to a shared page copy-on-write; `free()` returns
@@ -31,6 +35,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.construction import LDPCCode
+from repro.obs import metrics as obs_metrics
+from repro.obs import ras as obs_ras
 
 from .controller import ControllerStats
 from .paged import PagedProtectedStore
@@ -53,21 +59,10 @@ class ProtectedPagePool:
                  page_words: int = 256, capacity_pages: int = 64,
                  mesh=None, n_iters: int = 10, damping: float = 0.3,
                  llv_scale: float = 4.0, llv_mode: str = "manhattan",
-                 backend: str | None = None, policy=None):
+                 policy=None):
         if capacity_pages <= 0:
             raise ValueError(
                 f"capacity_pages must be positive, got {capacity_pages}")
-        if backend is not None:
-            import warnings
-            warnings.warn(
-                "ProtectedPagePool(backend=...) is deprecated; pass "
-                "policy=repro.kernels.KernelPolicy(mode) or set the ambient "
-                "policy with repro.kernels.use_policy. The backend keyword "
-                "will be removed next release.",
-                DeprecationWarning, stacklevel=2)
-            if policy is None:
-                from repro.kernels.backend import policy_from_store_backend
-                policy = policy_from_store_backend(backend)
         # the template store carries the code, validation, and the cached
         # encode/scan/decode executables every PooledStore delegates to
         self._template = PagedProtectedStore(
@@ -77,7 +72,6 @@ class ProtectedPagePool:
         self.code = self._template.code
         self.page_words = page_words
         self.mesh = mesh
-        self.backend = backend if backend is not None else "auto"
         self.policy = self._template.policy
         self.capacity_pages = capacity_pages
         self._storage: List[Optional[jnp.ndarray]] = [None] * capacity_pages
@@ -86,6 +80,12 @@ class ProtectedPagePool:
         self._stamp = [0] * capacity_pages     # last touch (engine step)
         self._free = list(range(capacity_pages - 1, -1, -1))  # pop() -> 0,1,…
         self._scrub_cursor = 0
+        # per-page scrub-flag EWMA + scanned marker: the signal behind
+        # prioritized sweeps (hot-flagging pages first) and the RAS
+        # estimator's per-owner region feed
+        self._flag_ewma = [0.0] * capacity_pages
+        self._scanned = [False] * capacity_pages
+        self.flag_alpha = 0.3
         self.stats = ControllerStats()         # pool-level scrub aggregates
         self.scrub_by_owner: Dict[object, dict] = {}
 
@@ -118,6 +118,8 @@ class ProtectedPagePool:
         self._refcount[pid] = 1
         self._owner[pid] = owner
         self._stamp[pid] = 0
+        self._flag_ewma[pid] = 0.0
+        self._scanned[pid] = False
         return pid
 
     def ref(self, pid: int) -> None:
@@ -135,6 +137,8 @@ class ProtectedPagePool:
         if self._refcount[pid] == 0:
             self._storage[pid] = None
             self._owner[pid] = None
+            self._flag_ewma[pid] = 0.0
+            self._scanned[pid] = False
             self._free.append(pid)
 
     # -- page access --------------------------------------------------------
@@ -160,8 +164,23 @@ class ProtectedPagePool:
 
     # -- background scrub ---------------------------------------------------
 
+    def page_flag_rate(self, pid: int) -> float:
+        """EWMA fraction of this page's words flagged across scrub scans
+        (0.0 until the first scan)."""
+        return self._flag_ewma[pid]
+
+    def hot_pages(self, top: Optional[int] = None) -> List[int]:
+        """Allocated pages ranked for scrubbing: never-scanned pages first
+        (coverage), then by descending flag EWMA (repair pressure)."""
+        allocated = [pid for pid in range(self.capacity_pages)
+                     if self._storage[pid] is not None]
+        ranked = sorted(allocated,
+                        key=lambda pid: (self._scanned[pid],
+                                         -self._flag_ewma[pid], pid))
+        return ranked[:top] if top is not None else ranked
+
     def scrub(self, *, max_pages: Optional[int] = None, now: int = 0,
-              min_age: int = 0) -> dict:
+              min_age: int = 0, prioritize: bool = False) -> dict:
         """Incrementally sweep allocated pages: scan, decode flagged pages,
         write repairs back, attributing repairs to each page's owner.
 
@@ -169,7 +188,13 @@ class ProtectedPagePool:
         `max_pages` caps this call's sweep (the engine interleaves small
         sweeps between decode steps), and `min_age` skips pages touched
         within the last `min_age` steps of `now` — hot pages are about to be
-        read (and so corrected) anyway."""
+        read (and so corrected) anyway.
+
+        `prioritize=True` replaces the round-robin order with `hot_pages()`:
+        never-scanned pages first, then pages by descending scan-flag EWMA,
+        so a small `max_pages` budget lands on the pages that have actually
+        been flagging (the estimator-driven schedule the serving engine
+        uses) instead of whatever the cursor reaches next."""
         scan = self._template._scanner()
         decode = self._template._decoder()
         allocated = [pid for pid in range(self.capacity_pages)
@@ -178,10 +203,14 @@ class ProtectedPagePool:
             return {"pages": 0, "flagged_words": 0, "repaired_words": 0,
                     "by_owner": {}}
         budget = len(allocated) if max_pages is None else max_pages
-        # rotate so the sweep resumes where the previous call stopped
-        start = next((j for j, pid in enumerate(allocated)
-                      if pid >= self._scrub_cursor), 0)
-        order = allocated[start:] + allocated[:start]
+        if prioritize:
+            order = self.hot_pages()
+        else:
+            # rotate so the sweep resumes where the previous call stopped
+            start = next((j for j, pid in enumerate(allocated)
+                          if pid >= self._scrub_cursor), 0)
+            order = allocated[start:] + allocated[:start]
+        est = obs_ras.current()
         swept = flagged_words = repaired = 0
         by_owner: Dict[object, dict] = {}
         for pid in order:
@@ -190,10 +219,20 @@ class ProtectedPagePool:
             if now - self._stamp[pid] < min_age:
                 continue
             swept += 1
-            self._scrub_cursor = pid + 1
+            if not prioritize:
+                self._scrub_cursor = pid + 1
             page = self._storage[pid]
             flags = scan(page)
             nf = int(jnp.sum(flags))
+            a = self.flag_alpha if self._scanned[pid] else 1.0
+            self._flag_ewma[pid] += a * (nf / page.shape[0]
+                                         - self._flag_ewma[pid])
+            self._scanned[pid] = True
+            owner = self._owner[pid]
+            if est.enabled:
+                est.observe_scan(nf, page.shape[0], n_symbols=self.code.n,
+                                 region=str(owner) if owner is not None
+                                 else "")
             if not nf:
                 continue
             flagged_words += nf
@@ -202,7 +241,13 @@ class ProtectedPagePool:
             self._storage[pid] = jnp.where(good[:, None], res.symbols, page)
             ok = int(jnp.sum(good))
             repaired += ok
-            owner = self._owner[pid]
+            if est.enabled:
+                iters = getattr(res, "iterations", None)
+                if iters is not None:
+                    est.observe_decode(iters, self._template.n_iters,
+                                       detect_fail=res.detect_fail,
+                                       region=str(owner) if owner is not None
+                                       else "")
             ent = by_owner.setdefault(
                 owner, {"flagged_words": 0, "repaired_words": 0})
             ent["flagged_words"] += nf
@@ -213,11 +258,23 @@ class ProtectedPagePool:
         self.stats.scrub_words += swept * self.page_words
         self.stats.scrub_corrected += repaired
         self.stats.scrub_uncorrectable += flagged_words - repaired
+        reg = obs_metrics.current()
+        if reg.enabled:
+            reg.counter("pool_scrub_pages", layer="pool").inc(swept)
+            reg.counter("pool_scrub_flagged", layer="pool").inc(flagged_words)
+            reg.counter("pool_scrub_repaired", layer="pool").inc(repaired)
         for owner, ent in by_owner.items():
             tot = self.scrub_by_owner.setdefault(
                 owner, {"flagged_words": 0, "repaired_words": 0})
             tot["flagged_words"] += ent["flagged_words"]
             tot["repaired_words"] += ent["repaired_words"]
+            if reg.enabled:
+                lab = {"layer": "pool",
+                       "tenant": str(owner) if owner is not None else ""}
+                reg.counter("pool_scrub_flagged_by_owner", **lab).inc(
+                    ent["flagged_words"])
+                reg.counter("pool_scrub_repaired_by_owner", **lab).inc(
+                    ent["repaired_words"])
         return {"pages": swept, "flagged_words": flagged_words,
                 "repaired_words": repaired, "by_owner": by_owner}
 

@@ -40,6 +40,8 @@ from repro.memory.paged import (PagedProtectedStore, dequantize_tensor,
                                 quantize_tensor, words_for_tensor)
 from repro.memory.pool import PooledStore, ProtectedPagePool
 from repro.nn.kv_source import KVSource
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 __all__ = ["ProtectedKVConfig", "ProtectedKVLayer", "ProtectedKVCaches"]
 
@@ -111,6 +113,11 @@ class ProtectedKVLayer(KVSource):
                                                **store_kw)
             self.v_store = PagedProtectedStore(code, page_words=wpu,
                                                **store_kw)
+            # tag standalone stores with the layer's owner so corrected
+            # reads attribute to the right RAS-estimator region (pool-backed
+            # stores carry it natively)
+            self.k_store.owner = owner
+            self.v_store.owner = owner
         self.words_per_page = wpu
         self._inject_key = jax.random.PRNGKey(0)
         self._injections = 0
@@ -153,10 +160,16 @@ class ProtectedKVLayer(KVSource):
 
     def _freeze(self) -> None:
         code = self.k_store.code
-        kw, kmeta = quantize_tensor(self.hot_k, code.p, code.k)
-        vw, vmeta = quantize_tensor(self.hot_v, code.p, code.k)
-        self.k_store.append_words(kw)
-        self.v_store.append_words(vw)
+        with obs_trace.span("kv.freeze", owner=str(self.owner)):
+            kw, kmeta = quantize_tensor(self.hot_k, code.p, code.k)
+            vw, vmeta = quantize_tensor(self.hot_v, code.p, code.k)
+            self.k_store.append_words(kw)
+            self.v_store.append_words(vw)
+        reg = obs_metrics.current()
+        if reg.enabled:
+            reg.counter("kv_pages_frozen", layer="kv",
+                        tenant=str(self.owner) if self.owner is not None
+                        else "").inc()
         self._metas.append((kmeta, vmeta))
         if self._decoded is not None:
             # write-through: storage was just written clean, so the decoded
@@ -196,6 +209,13 @@ class ProtectedKVLayer(KVSource):
         changed = self.k_store.inject(channel, kk, **kw)
         changed += self.v_store.inject(channel, vk, **kw)
         self.invalidate()
+        obs_trace.current().instant("kv.inject", owner=str(self.owner),
+                                    cells=changed)
+        reg = obs_metrics.current()
+        if reg.enabled:
+            reg.counter("kv_cells_injected", layer="kv",
+                        tenant=str(self.owner) if self.owner is not None
+                        else "").inc(changed)
         return changed
 
     def free(self) -> None:

@@ -1,0 +1,47 @@
+"""repro.obs — zero-dependency observability for the protected-serving
+stack.
+
+Three pillars, each with an ambient context-manager install mirroring
+`repro.kernels.backend.use_policy` and each free (shared no-op singleton)
+when not installed:
+
+- **metrics** (`use_metrics`): process-global `MetricsRegistry` of labeled
+  counters/gauges/histograms with dict-snapshot, JSONL, and Prometheus
+  text exporters.
+- **trace** (`use_tracer`): `span("engine.step")` context managers with
+  optional jax sync points, exported as Chrome trace-event JSON for
+  Perfetto.
+- **ras** (`use_estimator`): `ErrorRateEstimator` folding scan-flag rates
+  and `DecodeResult.iterations` into EWMA raw-BER / decoder-stress /
+  residual-BER estimates and an `adaptive_interval()` scrub schedule.
+
+Quickstart:
+
+    from repro import obs
+
+    with obs.use_metrics() as reg, obs.use_tracer() as tr, \
+         obs.use_estimator() as est:
+        engine.run()
+    print(reg.to_prometheus())
+    tr.to_chrome_trace("trace.json")
+    print(est.snapshot())
+"""
+from repro.obs import metrics, ras, trace
+from repro.obs.metrics import (MetricsRegistry, NULL_REGISTRY,
+                               instrument_count, use_metrics)
+from repro.obs.ras import (ErrorRateEstimator, NULL_ESTIMATOR,
+                           use_estimator)
+from repro.obs.trace import NULL_TRACER, Tracer, span, use_tracer
+
+current_metrics = metrics.current
+current_tracer = trace.current
+current_estimator = ras.current
+
+__all__ = [
+    "metrics", "trace", "ras",
+    "MetricsRegistry", "NULL_REGISTRY", "instrument_count", "use_metrics",
+    "current_metrics",
+    "Tracer", "NULL_TRACER", "span", "use_tracer", "current_tracer",
+    "ErrorRateEstimator", "NULL_ESTIMATOR", "use_estimator",
+    "current_estimator",
+]

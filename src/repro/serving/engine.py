@@ -32,6 +32,13 @@ protected datapath across many concurrent sequences:
   detected/corrected/uncorrectable on that tenant's reads; the engine
   aggregates them (plus the pool's per-owner scrub report) in
   `tenant_stats`.
+- **observability** — under `repro.obs` ambient contexts each step emits
+  an `engine.step` span (admit/prefill/decode/scrub children, preemption
+  instants) to the Chrome-trace tracer, counters/latency histograms to
+  the metrics registry (`publish_metrics` adds per-tenant gauges), and
+  the RAS estimator both ingests scrub telemetry and drives the scrub
+  schedule (adaptive interval + flag-hot page prioritization). With no
+  telemetry installed every hook is a no-op attribute check.
 
 The engine drives the unmodified model stack: `repro.models.lm.decode_step`
 routes `EngineCaches` (duck-typed `ProtectedKVCaches` surface, (B,) per-slot
@@ -43,6 +50,7 @@ path as the exact-parity fallback.
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -51,12 +59,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.memory.controller import ControllerStats
 from repro.memory.pool import (PoolExhausted, PooledStore, ProtectedPagePool)
 from repro.memory.paged import (dequantize_tensor, quantize_tensor,
                                 words_for_tensor)
 from repro.models.kv import ProtectedKVConfig
 from repro.nn.kv_source import KVSource
 from repro.nn.layers import CDT
+from repro.obs import metrics as obs_metrics
+from repro.obs import ras as obs_ras
+from repro.obs import trace as obs_trace
+from repro.obs.trace import span
 
 __all__ = ["BatchedPagedKV", "BatchedDenseKV", "EngineCaches",
            "SequenceState", "ServingEngine"]
@@ -135,13 +148,13 @@ class BatchedPagedKV(KVSource):
     def close_slot(self, b: int) -> dict:
         """Free the slot's pool blocks. Returns the slot's accumulated
         correction counters so the engine can bank them per tenant."""
-        out = {"detected": 0, "corrected": 0, "uncorrectable": 0}
+        out: Dict[str, int] = {}
         for store in (self.k_stores[b], self.v_stores[b]):
             if store is not None:
-                out["detected"] += store.stats.detected
-                out["corrected"] += store.stats.corrected
-                out["uncorrectable"] += store.stats.uncorrectable
+                ControllerStats.add_counts(out, store.stats)
                 store.free()
+        for k in ControllerStats.CORRECTION_KEYS:
+            out.setdefault(k, 0)
         self.k_stores[b] = self.v_stores[b] = None
         self.hot_len[b] = 0
         self.metas[b] = []
@@ -385,7 +398,7 @@ class BatchedDenseKV(KVSource):
 
     def close_slot(self, b: int) -> dict:
         self.len[b] = 0
-        return {"detected": 0, "corrected": 0, "uncorrectable": 0}
+        return dict.fromkeys(ControllerStats.CORRECTION_KEYS, 0)
 
     def ingest_slot(self, b: int, k: jnp.ndarray, v: jnp.ndarray) -> None:
         S = k.shape[1]
@@ -449,8 +462,9 @@ class SequenceState:
     replay_idx: int = 0                 # next generated token to feed
     admit_step: int = -1
     preemptions: int = 0
-    stats: Dict[str, int] = dataclasses.field(default_factory=lambda: {
-        "detected": 0, "corrected": 0, "uncorrectable": 0})
+    stats: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: dict.fromkeys(
+            ControllerStats.CORRECTION_KEYS, 0))
 
     @property
     def done(self) -> bool:
@@ -579,8 +593,10 @@ class ServingEngine:
         tokens = np.zeros((self.max_active, S), np.int64)
         for j, (seq, _b) in enumerate(group):
             tokens[j] = seq.prompt
-        logits, caches = lm.prefill(self.params, self.cfg,
-                                    jnp.asarray(tokens, jnp.int32))
+        with span("engine.prefill", prompt_len=S, n_seqs=len(group),
+                  tenants=[str(s.tenant) for s, _ in group]):
+            logits, caches = lm.prefill(self.params, self.cfg,
+                                        jnp.asarray(tokens, jnp.int32))
         for j, (seq, b) in enumerate(group):
             for (g, i), layer in self.caches.layers.items():
                 entry = caches[f"pos{i}"]
@@ -601,10 +617,11 @@ class ServingEngine:
                 seq.status = "done"
 
     def _release_slot(self, seq: SequenceState) -> None:
+        # the ONLY place slot-store counters enter seq.stats: stores are
+        # freed by close_slot in the same motion, so a counter is banked
+        # exactly once (tenant_stats sums banked + still-live, never both)
         for layer in self.caches.layers.values():
-            counters = layer.close_slot(seq.slot)
-            for k, v in counters.items():
-                seq.stats[k] += v
+            ControllerStats.add_counts(seq.stats, layer.close_slot(seq.slot))
         self.slots[seq.slot] = None
         seq.slot = None
 
@@ -645,9 +662,37 @@ class ServingEngine:
     def step(self) -> dict:
         """One engine tick: admit, preflight capacity, run one batched
         decode step across the active slots, retire finished sequences,
-        interleave background scrub. Returns a step report."""
+        interleave background scrub. Returns a step report.
+
+        Observability rides along when installed (`repro.obs`): one
+        `engine.step` span per tick with admit/decode/scrub child spans,
+        step counters/latency into the ambient metrics registry, and the
+        RAS estimator drives the scrub schedule — `adaptive_interval`
+        shrinks the nominal `scrub_every` period under flag pressure and
+        sweeps flag-hot pages first (`prioritize=True`). All of it
+        no-ops at one attribute check per pillar when telemetry is off."""
+        t_start = time.perf_counter()
+        with span("engine.step", step=self._step_no) as sp:
+            report = self._step_inner(sp)
+        reg = obs_metrics.current()
+        if reg.enabled:
+            reg.counter("engine_steps", layer="engine").inc()
+            reg.counter("engine_tokens", layer="engine").inc(
+                report["tokens"])
+            reg.counter("engine_retired", layer="engine").inc(
+                report["retired"])
+            reg.counter("engine_preemptions", layer="engine").inc(
+                report["preempted"])
+            reg.histogram("engine_step_seconds", layer="engine").observe(
+                time.perf_counter() - t_start)
+            reg.gauge("engine_active_slots", layer="engine").set(
+                report["active"])
+        return report
+
+    def _step_inner(self, sp) -> dict:
         from repro.models import lm
-        admitted = self._admit()
+        with span("engine.admit"):
+            admitted = self._admit()
         active_mask = np.zeros(self.max_active, bool)
         tokens = np.zeros((self.max_active, 1), np.int64)
         pos = np.zeros(self.max_active, np.int64)
@@ -660,6 +705,7 @@ class ServingEngine:
         report = {"step": self._step_no, "admitted": len(admitted),
                   "active": int(active_mask.sum()), "tokens": 0,
                   "retired": 0, "preempted": 0}
+        sp.set(active=report["active"], admitted=report["admitted"])
         if not active_mask.any():
             self._step_no += 1
             return report
@@ -667,14 +713,21 @@ class ServingEngine:
         self._preflight(active_mask)
         report["preempted"] = sum(s.preemptions
                                   for s in self.sequences) - pre
+        if report["preempted"]:
+            obs_trace.current().instant("engine.preempt",
+                                        count=report["preempted"])
         if not active_mask.any():
             self._step_no += 1
             return report
         self.caches.set_active(active_mask)
-        logits, _ = lm.decode_step(
-            self.params, self.cfg, self.caches,
-            jnp.asarray(tokens, jnp.int32), jnp.asarray(pos, jnp.int32))
-        nxt = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))
+        with span("engine.decode", step=self._step_no,
+                  active=report["active"]):
+            logits, _ = lm.decode_step(
+                self.params, self.cfg, self.caches,
+                jnp.asarray(tokens, jnp.int32), jnp.asarray(pos, jnp.int32))
+            # argmax + host transfer is the step's sync point, so the span
+            # covers device completion, not just dispatch
+            nxt = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))
         for b, seq in enumerate(self.slots):
             if seq is None or not active_mask[b]:
                 continue
@@ -691,16 +744,33 @@ class ServingEngine:
         self._step_no += 1
         if self.protected:
             self._touch_pages()
-            if self.scrub_every and self._step_no % self.scrub_every == 0:
+            if self.scrub_every and self._due_for_scrub():
                 # scrub moves storage TOWARD clean, so memoized decoded
                 # views (themselves corrected reads) stay consistent — no
                 # invalidation, which is why interleaved scrub stays cheap
-                rep = self.pool.scrub(max_pages=self.scrub_max_pages,
-                                      now=self._step_no,
-                                      min_age=self.scrub_min_age)
+                est = obs_ras.current()
+                with span("engine.scrub") as ssp:
+                    rep = self.pool.scrub(max_pages=self.scrub_max_pages,
+                                          now=self._step_no,
+                                          min_age=self.scrub_min_age,
+                                          prioritize=est.enabled)
+                    ssp.set(pages=rep["pages"],
+                            flagged=rep["flagged_words"],
+                            repaired=rep["repaired_words"])
                 self.scrub_reports.append(rep)
                 report["scrubbed_pages"] = rep["pages"]
         return report
+
+    def _due_for_scrub(self) -> bool:
+        """Fixed `scrub_every` cadence, unless an ambient RAS estimator is
+        installed — then the period is `adaptive_interval(scrub_every)`:
+        shorter while pages flag above the estimator's target rate, longer
+        when the pool is quiet."""
+        est = obs_ras.current()
+        interval = self.scrub_every
+        if est.enabled:
+            interval = max(1, est.adaptive_interval(self.scrub_every))
+        return self._step_no % interval == 0
 
     def _touch_pages(self) -> None:
         for b, seq in enumerate(self.slots):
@@ -737,31 +807,62 @@ class ServingEngine:
         self._invalidate_all()
         return changed
 
+    @staticmethod
+    def _slot_stores(layer, b: int):
+        """The live `PooledStore`s behind slot `b` of one KV layer (empty
+        for unprotected/dense layers)."""
+        for name in ("k_stores", "v_stores"):
+            stores = getattr(layer, name, None)
+            if stores is not None and stores[b] is not None:
+                yield stores[b]
+
     def tenant_stats(self, tenant) -> Dict[str, int]:
         """Aggregated correction accounting for one tenant: banked counters
         from retired/preempted slots, live slot stores, and the pool's
         per-owner scrub attribution."""
-        out = {"detected": 0, "corrected": 0, "uncorrectable": 0,
-               "scrub_flagged": 0, "scrub_repaired": 0}
+        out = dict.fromkeys(
+            ControllerStats.CORRECTION_KEYS + ("scrub_flagged",
+                                               "scrub_repaired"), 0)
         for seq in self.sequences:
             if seq.tenant != tenant:
                 continue
-            for k in ("detected", "corrected", "uncorrectable"):
-                out[k] += seq.stats[k]
+            # banked counters (stores freed on slot close — disjoint from
+            # the live-store sums below by construction, see _release_slot)
+            ControllerStats.add_counts(out, seq.stats)
             if seq.slot is not None:
                 for layer in self.caches.layers.values():
-                    for store in (layer.k_stores[seq.slot],
-                                  layer.v_stores[seq.slot]):
-                        if store is not None:
-                            out["detected"] += store.stats.detected
-                            out["corrected"] += store.stats.corrected
-                            out["uncorrectable"] += store.stats.uncorrectable
+                    for store in self._slot_stores(layer, seq.slot):
+                        ControllerStats.add_counts(out, store.stats)
         if self.protected:
             ent = self.pool.scrub_by_owner.get(tenant)
             if ent:
                 out["scrub_flagged"] = ent["flagged_words"]
                 out["scrub_repaired"] = ent["repaired_words"]
         return out
+
+    def publish_metrics(self, registry=None) -> None:
+        """Export the engine's current accounting into a metrics registry
+        (the ambient one by default): per-tenant correction triples and
+        scrub attribution as gauges (idempotent across repeated publishes),
+        plus the pool's `ControllerStats`. Benchmarks call this right
+        before `registry.snapshot()` so per-tenant corrected counts land
+        in the exported artifact."""
+        reg = obs_metrics.current() if registry is None else registry
+        if not getattr(reg, "enabled", False):
+            return
+        tenants = {}
+        for s in self.sequences:
+            tenants.setdefault(str(s.tenant), s.tenant)
+        for label in sorted(tenants):
+            for k, v in self.tenant_stats(tenants[label]).items():
+                reg.gauge(f"tenant_{k}", layer="engine",
+                          tenant=label).set(v)
+        if self.protected:
+            self.pool.stats.publish(reg, layer="pool")
+            reg.gauge("pool_allocated", layer="pool").set(
+                self.pool.n_allocated)
+            reg.gauge("pool_available", layer="pool").set(
+                self.pool.available)
 
     def stats(self) -> dict:
         live = sum(s is not None for s in self.slots)

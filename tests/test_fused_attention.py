@@ -10,8 +10,9 @@ in VMEM (no bf16 round-trip between dequant and QK^T), so it is asserted
 allclose at bf16 tolerance against the same reference.
 
 Also covers the `KernelPolicy` redesign: `use_policy` overrides select the
-right executable (no stale jit-cache hits), and the legacy `backend=` /
-`scan_backend=` / `{"paged": ...}` forms warn but keep working.
+right executable (no stale jit-cache hits), the removed legacy `backend=` /
+`scan_backend=` kwargs fail loudly, and the `{"paged": ...}` dict-cache
+form still warns through its deprecation window.
 """
 from __future__ import annotations
 
@@ -211,35 +212,40 @@ def test_flash_attention_honors_policy():
 
 
 # ---------------------------------------------------------------------------
-# deprecated aliases: one-release warnings, old behavior preserved
+# removed aliases: the one-release deprecation window is over; the old
+# kwargs now fail loudly, and the converter functions carry the vocabulary
 # ---------------------------------------------------------------------------
 
 
-def test_store_backend_kwarg_deprecated():
+def test_store_backend_kwarg_removed():
+    from repro.kernels.backend import policy_from_store_backend
     from repro.memory import PagedProtectedStore
-    with pytest.warns(DeprecationWarning, match="backend"):
-        st = PagedProtectedStore("wl40_r08", page_words=8, backend="ref")
+    with pytest.raises(TypeError, match="backend"):
+        PagedProtectedStore("wl40_r08", page_words=8, backend="ref")
+    st = PagedProtectedStore("wl40_r08", page_words=8,
+                             policy=policy_from_store_backend("ref"))
     assert st.policy.resolve() == "ref"
-    with pytest.warns(DeprecationWarning):
-        with pytest.raises(ValueError, match="backend"):
-            PagedProtectedStore("wl40_r08", backend="gpu")
 
 
-def test_pool_backend_kwarg_deprecated():
+def test_pool_backend_kwarg_removed():
+    from repro.kernels.backend import policy_from_store_backend
     from repro.memory.pool import ProtectedPagePool
-    with pytest.warns(DeprecationWarning, match="backend"):
-        pool = ProtectedPagePool("wl40_r08", page_words=8,
-                                 capacity_pages=4, backend="ref")
+    with pytest.raises(TypeError, match="backend"):
+        ProtectedPagePool("wl40_r08", page_words=8, capacity_pages=4,
+                          backend="ref")
+    pool = ProtectedPagePool("wl40_r08", page_words=8, capacity_pages=4,
+                             policy=policy_from_store_backend("ref"))
     assert pool.policy.resolve() == "ref"
 
 
-def test_controller_scan_backend_kwarg_deprecated():
+def test_controller_scan_backend_kwarg_removed():
+    from repro.kernels.backend import policy_from_scan_backend
     from repro.memory.controller import MemoryController
-    with pytest.warns(DeprecationWarning, match="scan_backend"):
-        ctl = MemoryController(scan_backend="host")
+    with pytest.raises(TypeError, match="scan_backend"):
+        MemoryController(scan_backend="host")
+    ctl = MemoryController(policy=policy_from_scan_backend("host"))
     assert ctl.resolved_scan_backend() == "host"
-    with pytest.warns(DeprecationWarning, match="scan_backend"):
-        dev = MemoryController(scan_backend="device")
+    dev = MemoryController(policy=policy_from_scan_backend("device"))
     assert dev.resolved_scan_backend() == "device"
 
 

@@ -104,8 +104,10 @@ def test_symbolize_roundtrip(p, rng):
 # array + controller policies
 # ---------------------------------------------------------------------------
 
-def _array(policy, **kw):
-    return ProtectedMemoryArray("wl80_r08", controller=policy,
+def _array(ctrl, **kw):
+    # note: `policy=` in **kw is the controller's KernelPolicy, distinct
+    # from the controller-policy NAME passed positionally
+    return ProtectedMemoryArray("wl80_r08", controller=ctrl,
                                 chunk_size=64, **kw)
 
 
@@ -218,6 +220,7 @@ def test_read_returns_writable_array(rng):
 # ---------------------------------------------------------------------------
 
 from repro.core import CODE_REGISTRY, np_encode_words  # noqa: E402
+from repro.kernels.backend import policy_from_scan_backend  # noqa: E402
 from repro.memory.controller import MemoryController  # noqa: E402
 
 
@@ -237,9 +240,10 @@ def test_device_scan_matches_host_scan_all_registry_codes(name, rng):
     host BLAS scan on every registry code (GF(3)/GF(5)/GF(7))."""
     code = get_code(name)
     enc = _corrupted_words(code, rng)
-    host = MemoryController(scan_backend="host", scan_block=16)
-    dev = MemoryController(scan_backend="device", scan_block=16,
-                           use_sharded=False)
+    host = MemoryController(policy=policy_from_scan_backend("host"),
+                            scan_block=16)
+    dev = MemoryController(policy=policy_from_scan_backend("device"),
+                           scan_block=16, use_sharded=False)
     mh = host._scan_syndromes(code, enc)
     md = dev._scan_syndromes(code, enc)
     np.testing.assert_array_equal(mh, md)
@@ -247,8 +251,12 @@ def test_device_scan_matches_host_scan_all_registry_codes(name, rng):
 
 
 def test_scan_backend_validated():
+    # the legacy vocabulary lives on only in the converter; bad names still
+    # fail loudly there, and the removed kwarg itself is a TypeError
     with pytest.raises(ValueError, match="scan_backend"):
-        MemoryController(scan_backend="gpu")
+        policy_from_scan_backend("gpu")
+    with pytest.raises(TypeError, match="scan_backend"):
+        MemoryController(scan_backend="host")
 
 
 def test_page_words_validated(rng):
@@ -286,7 +294,8 @@ def test_paged_scrub_matches_whole_array_scrub(rng):
     repaired = {}
     for backend in ("host", "device"):
         for page_words in (None, 7):
-            mem = _array("writeback", scan_backend=backend, scan_block=32)
+            mem = _array("writeback", policy=policy_from_scan_backend(backend),
+                         scan_block=32)
             mem.write("t", t)
             mem.inject(uniform_flip(3, 2e-3), key=jax.random.PRNGKey(4))
             rep = mem.scrub(page_words=page_words)
@@ -306,7 +315,7 @@ def test_paged_scrub_matches_whole_array_scrub(rng):
 def test_scrub_pages_accepts_external_page_iterator(rng):
     """The paged API scrubs any iterator of writable (b, n) pages — not just
     this array's store (the cold-storage-service surface)."""
-    mem = _array("basic", scan_backend="host")
+    mem = _array("basic", policy=policy_from_scan_backend("host"))
     code = mem.code
     w = rng.integers(0, code.p, (40, code.k))
     want = np_encode_words(w, code).astype(np.int8)
@@ -332,7 +341,8 @@ def test_big_field_scan_falls_back_to_exact_int64(rng):
     enc = np_encode_words(w, code)
     f32 = (enc.astype(np.float32) @ code.H.T.astype(np.float32))
     assert np.any(f32.astype(np.int64) % code.p != 0)   # f32 IS inexact here
-    host = MemoryController(scan_backend="host", use_sharded=False)
+    host = MemoryController(policy=policy_from_scan_backend("host"),
+                            use_sharded=False)
     assert not host._scan_syndromes(code, enc).any()
     enc[:, 0] = (enc[:, 0] + 1) % code.p
     assert host._scan_syndromes(code, enc).all()
@@ -347,7 +357,8 @@ def test_big_field_device_backend_routes_to_exact_host_scan(rng):
     assert code.n * (code.p - 1) ** 2 >= 2 ** 31
     w = rng.integers(0, code.p, (16, code.k))
     enc = np_encode_words(w, code)
-    dev = MemoryController(scan_backend="device", use_sharded=False)
+    dev = MemoryController(policy=policy_from_scan_backend("device"),
+                           use_sharded=False)
     assert dev._scan_route(code) == "host"          # routed past the kernel
     assert not dev._scan_syndromes(code, enc).any()
     # reports must label the backend that actually ran, not the config

@@ -14,6 +14,7 @@ import pytest
 
 from repro.core import (decode_pipelined, decode_stream, get_code,
                         np_encode_words)
+from repro.kernels.backend import policy_from_store_backend
 from repro.memory import (PagedProtectedStore, ProtectedMemoryArray,
                           asymmetric_adjacent, dequantize_tensor,
                           quantize_tensor, words_for_tensor)
@@ -139,7 +140,8 @@ def test_paged_store_encode_parity_both_backends(rng):
     u = rng.integers(0, code.p, (21, code.k))
     host = np_encode_words(u, code)
     for backend in ("kernel", "ref"):
-        st = PagedProtectedStore(code, page_words=8, backend=backend)
+        st = PagedProtectedStore(code, page_words=8,
+                                 policy=policy_from_store_backend(backend))
         st.append_words(u)
         assert np.array_equal(st.export_words().astype(np.int64), host)
         assert np.array_equal(np.asarray(st.read_info(0, 21)), u)
@@ -211,7 +213,9 @@ def test_paged_store_validation():
     with pytest.raises(ValueError, match="page_words"):
         PagedProtectedStore("wl40_r08", page_words=0)
     with pytest.raises(ValueError, match="backend"):
-        PagedProtectedStore("wl40_r08", backend="gpu")
+        policy_from_store_backend("gpu")
+    with pytest.raises(TypeError, match="backend"):
+        PagedProtectedStore("wl40_r08", backend="ref")
     fake_mesh = types.SimpleNamespace(shape={"data": 3})
     with pytest.raises(ValueError, match="page_words=8.*mesh"):
         PagedProtectedStore("wl40_r08", page_words=8, mesh=fake_mesh)

@@ -112,7 +112,8 @@ def _rehome(cfg, batch, max_seq, caches):
     full = init_caches(cfg, batch, max_seq)
     return jax.tree.map(
         lambda d, s: s if d.shape == s.shape
-        else jnp.pad(s, [(0, a - b) for a, b in zip(d.shape, s.shape)]),
+        else jnp.pad(s, [(0, a - b) for a, b in zip(d.shape, s.shape,
+                                                     strict=True)]),
         full, caches)
 
 

@@ -11,14 +11,14 @@ from __future__ import annotations
 import json
 import os
 from datetime import datetime, timezone
-from typing import List, Optional, Sequence
+from collections.abc import Sequence
 
 SCHEMA_VERSION = 1
 DEFAULT_PATH = "results/bench_rows.json"
 
 
 def standardize(rows: Sequence[dict], bench: str,
-                ts: Optional[str] = None) -> List[dict]:
+                ts: str | None = None) -> list[dict]:
     """Rows from one run share one `ts`, so consumers can group/select by
     run instead of guessing which of the accumulated rows is current."""
     if ts is None:
@@ -33,13 +33,13 @@ def standardize(rows: Sequence[dict], bench: str,
     return out
 
 
-def load_rows(path: str = DEFAULT_PATH) -> List[dict]:
+def load_rows(path: str = DEFAULT_PATH) -> list[dict]:
     if not os.path.exists(path):
         return []
     with open(path) as f:
         data = json.load(f)
     if isinstance(data, dict):          # legacy {bench: [rows]} layout
-        flat: List[dict] = []
+        flat: list[dict] = []
         for name, rs in data.items():
             flat.extend(standardize(rs, name, ts=""))   # measured pre-schema
         return flat

@@ -1,0 +1,37 @@
+"""repro.analysis — codebase-aware static lint pass + runtime sanitizer.
+
+Two halves, one contract: the invariants ruff cannot see.
+
+- **Static pass** (`python -m repro.analysis src benchmarks tests`): AST
+  rules with stable `RPL###` codes over the repo's own conventions —
+  kernel-policy hygiene, GF accumulator-bound guards, trace purity,
+  jit-cache hygiene, the telemetry allocation-free-when-disabled contract,
+  and removed-API detection. `# noqa: RPL###` suppresses a finding on its
+  line (with a justification comment, per repo policy).
+- **Runtime sanitizer** (`use_sanitizer`): `jax.checkify` assertions on the
+  GF/attention entry points (symbols in `[0, p)`, finite attention
+  accumulators, sane quantization scales) so tests can turn silent
+  arithmetic corruption into hard errors:
+
+      from repro.analysis import use_sanitizer
+      with use_sanitizer():
+          store.append_words(w)      # raises on out-of-range symbols
+
+The static half is stdlib-only (no jax import); sanitizer names are
+lazily re-exported so `python -m repro.analysis` stays fast.
+"""
+from repro.analysis.diagnostics import Diagnostic
+from repro.analysis.engine import RULES, FileContext, run_file, run_paths
+
+_SANITIZER_NAMES = ("use_sanitizer", "sanitizer_enabled", "check_gf_symbols",
+                    "check_finite", "check_quant_scales", "SanitizerError")
+
+__all__ = ["Diagnostic", "FileContext", "RULES", "run_file", "run_paths",
+           *_SANITIZER_NAMES]
+
+
+def __getattr__(name):
+    if name in _SANITIZER_NAMES:
+        from repro.analysis import sanitizer
+        return getattr(sanitizer, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,58 @@
+"""CLI: `python -m repro.analysis [paths...] [--json] [--select RPL001,...]`.
+
+Exits nonzero when any diagnostic is emitted — the CI `analysis` job runs
+`python -m repro.analysis src benchmarks tests` and fails on any finding.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from .engine import RULES, run_paths
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Codebase-aware static lint pass for the GF/Pallas "
+                    "stack (RPL### rules; suppress with `# noqa: RPL###`).")
+    ap.add_argument("paths", nargs="*", default=["src", "benchmarks",
+                                                 "tests"],
+                    help="files or directories to scan (default: src "
+                         "benchmarks tests)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit machine-readable JSON instead of text")
+    ap.add_argument("--select", default=None,
+                    help="comma-separated RPL codes to run (default: all)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule table and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        from . import rules as _rules  # noqa: F401  # registers the rules
+        for code in sorted(RULES):
+            r = RULES[code]
+            print(f"{code}  {r.name:<24} {r.summary}")
+        return 0
+
+    select = None
+    if args.select:
+        select = [c.strip().upper() for c in args.select.split(",") if c]
+    diags, n_files = run_paths(args.paths, select=select)
+
+    if args.json:
+        json.dump({"files_scanned": n_files,
+                   "diagnostics": [d.to_json() for d in diags]},
+                  sys.stdout, indent=2)
+        print()
+    else:
+        for d in diags:
+            print(d.format())
+        noun = "diagnostic" if len(diags) == 1 else "diagnostics"
+        print(f"{len(diags)} {noun} ({n_files} files scanned)")
+    return 1 if diags else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

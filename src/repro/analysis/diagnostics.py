@@ -1,0 +1,27 @@
+"""Diagnostic records emitted by the `repro.analysis` rule engine.
+
+A diagnostic pins one rule violation to a file:line:col. The `code` is the
+stable `RPL###` identifier used for `# noqa: RPL###` suppression and
+`--select` filtering; `message` is the human sentence; `rule_name` is the
+short kebab-case rule slug shown by `--list-rules`.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Diagnostic:
+    code: str                 # "RPL003"
+    message: str
+    path: str                 # posix-style, as passed on the CLI
+    line: int                 # 1-indexed
+    col: int                  # 0-indexed (ast convention)
+    rule_name: str = ""
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.code} {self.message}"
+
+    def to_json(self) -> dict:
+        return {"code": self.code, "message": self.message, "path": self.path,
+                "line": self.line, "col": self.col, "rule": self.rule_name}

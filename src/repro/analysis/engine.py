@@ -1,0 +1,207 @@
+"""AST rule engine for the codebase-aware static lint pass.
+
+`run_paths(paths)` walks the given files/directories, parses each `*.py`
+once, and runs every registered rule (see `repro.analysis.rules`) over the
+shared `FileContext`. Violations come back as `Diagnostic`s unless the
+flagged line carries a `# noqa` comment — bare `# noqa` suppresses every
+code on that line, `# noqa: RPL003` (comma-separated for several) just the
+listed ones. Suppressions must be justified: the repo policy is one short
+trailing comment per noqa saying why the rule does not apply.
+
+Rules register through the `rule(...)` decorator into `RULES`; each rule is
+a generator over `(node, message)` pairs. The engine owns path/line/col
+bookkeeping, noqa filtering, and `--select` subsetting so rules stay pure
+AST logic.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+from collections.abc import Callable, Iterable, Iterator
+
+from .diagnostics import Diagnostic
+
+__all__ = ["FileContext", "Rule", "RULES", "rule", "run_file", "run_paths",
+           "iter_py_files"]
+
+# bare `# noqa` (all codes) or `# noqa: RPL001, RPL004` (listed codes)
+_NOQA_RE = re.compile(
+    r"#\s*noqa\b"
+    r"(?::\s*(?P<codes>[A-Z]{2,4}\d{3}(?:[,\s]+[A-Z]{2,4}\d{3})*))?",
+    re.IGNORECASE)
+
+
+class Rule:
+    """One registered check: a stable RPL code plus a pure-AST generator."""
+
+    def __init__(self, code: str, name: str, summary: str,
+                 check: Callable[["FileContext"], Iterator]):
+        self.code = code
+        self.name = name
+        self.summary = summary
+        self.check = check
+
+    def __repr__(self):
+        return f"Rule({self.code} {self.name})"
+
+
+RULES: dict[str, Rule] = {}
+
+
+def rule(code: str, name: str, summary: str):
+    """Register a rule function under `code`. The function takes a
+    `FileContext` and yields `(ast.AST node, message str)` pairs."""
+    def deco(fn):
+        if code in RULES:
+            raise ValueError(f"duplicate rule code {code}")
+        RULES[code] = Rule(code, name, summary, fn)
+        return fn
+    return deco
+
+
+def _parse_noqa(lines: list[str]) -> dict[int, frozenset | None]:
+    """line number (1-indexed) -> None (bare noqa: all codes) or the
+    frozenset of suppressed codes."""
+    out: dict[int, frozenset | None] = {}
+    for i, text in enumerate(lines, start=1):
+        if "noqa" not in text:
+            continue
+        m = _NOQA_RE.search(text)
+        if not m:
+            continue
+        codes = m.group("codes")
+        if codes is None:
+            out[i] = None
+        else:
+            out[i] = frozenset(c.strip().upper()
+                               for c in re.split(r"[,\s]+", codes) if c)
+    return out
+
+
+def _collect_imports(tree: ast.Module) -> dict[str, str]:
+    """Local name -> dotted origin ("np" -> "numpy", "ss" ->
+    "repro.kernels.ops.scan_syndromes"). Relative imports keep their
+    leading dots so callers can still pattern-match the tail."""
+    imports: dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                imports[alias.asname or alias.name.split(".")[0]] = alias.name
+        elif isinstance(node, ast.ImportFrom):
+            base = "." * node.level + (node.module or "")
+            for alias in node.names:
+                if alias.name == "*":
+                    continue
+                origin = f"{base}.{alias.name}" if base else alias.name
+                imports[alias.asname or alias.name] = origin
+    return imports
+
+
+class FileContext:
+    """Everything a rule needs about one parsed file."""
+
+    def __init__(self, path: str, source: str):
+        self.path = path.replace(os.sep, "/")
+        self.source = source
+        self.tree = ast.parse(source, filename=path)
+        self.lines = source.splitlines()
+        self.noqa = _parse_noqa(self.lines)
+        self.imports = _collect_imports(self.tree)
+        self._parents: dict[ast.AST, ast.AST] = {}
+        for parent in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(parent):
+                self._parents[child] = parent
+
+    def parent(self, node: ast.AST) -> ast.AST | None:
+        return self._parents.get(node)
+
+    def ancestors(self, node: ast.AST) -> Iterator[ast.AST]:
+        cur = self._parents.get(node)
+        while cur is not None:
+            yield cur
+            cur = self._parents.get(cur)
+
+    def dotted(self, node: ast.AST) -> str | None:
+        """Textual dotted name of a Name/Attribute chain ("np.random.rng"),
+        or None for anything that is not a plain chain."""
+        parts = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if not isinstance(node, ast.Name):
+            return None
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+
+    def qualname(self, node: ast.AST) -> str | None:
+        """`dotted()` with the leading segment resolved through this file's
+        imports: `jnp.dot` -> "jax.numpy.dot"."""
+        text = self.dotted(node)
+        if text is None:
+            return None
+        head, _, rest = text.partition(".")
+        origin = self.imports.get(head, head)
+        return f"{origin}.{rest}" if rest else origin
+
+    def suppressed(self, code: str, line: int) -> bool:
+        if line not in self.noqa:
+            return False
+        codes = self.noqa[line]
+        return codes is None or code in codes
+
+
+def iter_py_files(paths: Iterable[str]) -> Iterator[str]:
+    for path in paths:
+        if os.path.isfile(path):
+            if path.endswith(".py"):
+                yield path
+            continue
+        for root, dirs, files in os.walk(path):
+            dirs[:] = sorted(d for d in dirs
+                             if not d.startswith(".") and d != "__pycache__")
+            for f in sorted(files):
+                if f.endswith(".py"):
+                    yield os.path.join(root, f)
+
+
+def run_file(path: str, select: Iterable[str] | None = None
+             ) -> list[Diagnostic]:
+    from . import rules as _rules  # noqa: F401  # registers the rule set
+
+    with open(path, encoding="utf-8") as fh:
+        source = fh.read()
+    try:
+        ctx = FileContext(path, source)
+    except SyntaxError as e:
+        return [Diagnostic("RPL000", f"syntax error: {e.msg}",
+                           path.replace(os.sep, "/"), e.lineno or 1,
+                           (e.offset or 1) - 1, "parse-error")]
+    wanted = None if select is None else {c.upper() for c in select}
+    out: list[Diagnostic] = []
+    for r in RULES.values():
+        if wanted is not None and r.code not in wanted:
+            continue
+        for node, message in r.check(ctx):
+            line = getattr(node, "lineno", 1)
+            col = getattr(node, "col_offset", 0)
+            if ctx.suppressed(r.code, line):
+                continue
+            out.append(Diagnostic(r.code, message, ctx.path, line, col,
+                                  r.name))
+    out.sort(key=lambda d: (d.path, d.line, d.col, d.code))
+    return out
+
+
+def run_paths(paths: Iterable[str], select: Iterable[str] | None = None
+              ) -> tuple[list[Diagnostic], int]:
+    """Run every (selected) rule over the python files under `paths`.
+    Returns (diagnostics, files_scanned)."""
+    from . import rules as _rules  # noqa: F401  # registers the rule set
+
+    diags: list[Diagnostic] = []
+    n_files = 0
+    for path in iter_py_files(paths):
+        n_files += 1
+        diags.extend(run_file(path, select=select))
+    return diags, n_files

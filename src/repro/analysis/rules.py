@@ -1,0 +1,498 @@
+"""Codebase-specific rules for the GF/Pallas stack.
+
+Each rule encodes an invariant the generic linters cannot see:
+
+- **RPL001 kernel-policy-hygiene** — literal `interpret=` booleans outside
+  `kernels/backend.py`. PR 7 shipped a hardcoded `interpret=True` default in
+  `flash_attention.py` that silently interpreted on TPU; mode selection must
+  route through `KernelPolicy` / `use_policy` / `resolve_interpret`.
+- **RPL002 overflow-bound-guard** — direct calls to the GF kernel entry
+  points (`scan_syndromes`, `gf_matmul`, `encode_words` from
+  `repro.kernels.ops`, or any raw `*_pallas` kernel) outside
+  `src/repro/kernels/` without a reachable `K*(p-1)**2` accumulator-bound
+  guard in the enclosing function/class. The int32 kernel accumulator wraps
+  silently past `n*(p-1)^2 >= 2^31` (float32 host BLAS past `2^24`).
+- **RPL003 trace-purity** — impure Python inside `jax.jit` /
+  `pl.pallas_call` targets: stdlib `random`/`time`, `np.random`, `.item()`
+  coercion, `float()`/`bool()`/`int()` on traced parameters, mutable
+  default arguments. These either leak host state into a cached trace or
+  force device sync.
+- **RPL004 jit-cache-hygiene** — `jax.jit(...)` constructed inside a loop,
+  invoked immediately (`jax.jit(f)(x)`), or built per-call in a method with
+  no cache write: every such construction retraces from scratch.
+- **RPL005 telemetry-hot-path** — instrument calls (`counter`/`gauge`/
+  `histogram` factories, `observe_scan`/`observe_decode`, `.instant`) in
+  the hot-path packages (`memory/`, `serving/`, `models/`, `core/`) must
+  sit behind an `.enabled` read, per the `repro.obs` null-singleton design
+  ("allocation-free when disabled").
+- **RPL006 deprecated-api** — the removed `backend=`/`scan_backend=`
+  constructor kwargs and the legacy `{"paged": ...}` dict KV routing.
+
+Rules yield `(node, message)`; the engine handles noqa and reporting.
+"""
+from __future__ import annotations
+
+import ast
+
+from .engine import FileContext, rule
+
+# --------------------------------------------------------------------------
+# shared helpers
+# --------------------------------------------------------------------------
+
+_JIT_WRAPPERS = ("jax.jit", "jit", "jax.pmap", "pmap")
+_PALLAS_WRAPPERS = ("jax.experimental.pallas.pallas_call", "pallas_call")
+_PARTIAL = ("functools.partial", "partial")
+
+_SCOPES = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+_LOOPS = (ast.For, ast.AsyncFor, ast.While, ast.ListComp, ast.SetComp,
+          ast.DictComp, ast.GeneratorExp)
+
+
+def _is_wrapper(ctx: FileContext, func: ast.AST, names) -> bool:
+    qn = ctx.qualname(func)
+    return qn in names if qn is not None else False
+
+
+def _enclosing_function(ctx: FileContext, node: ast.AST):
+    for anc in ctx.ancestors(node):
+        if isinstance(anc, _SCOPES):
+            return anc
+    return None
+
+
+def _static_argnames(call: ast.Call) -> frozenset:
+    """static_argnames=("p", ...) parsed off a partial(jax.jit, ...) call."""
+    for kw in call.keywords:
+        if kw.arg in ("static_argnames", "static_argnums") and \
+                isinstance(kw.value, (ast.Tuple, ast.List)):
+            return frozenset(e.value for e in kw.value.elts
+                             if isinstance(e, ast.Constant)
+                             and isinstance(e.value, str))
+        if kw.arg == "static_argnames" and isinstance(kw.value, ast.Constant):
+            return frozenset([kw.value.value])
+    return frozenset()
+
+
+def _defs_by_name(ctx: FileContext) -> dict:
+    out: dict[str, list] = {}
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            out.setdefault(node.name, []).append(node)
+    return out
+
+
+def _jit_targets(ctx: FileContext) -> dict:
+    """Function/Lambda nodes that become jax traces -> frozenset of
+    statically-bound parameter names (never tracers inside the body)."""
+    targets: dict[ast.AST, frozenset] = {}
+    defs = _defs_by_name(ctx)
+
+    def mark(fn_node, statics):
+        if fn_node is not None:
+            targets[fn_node] = targets.get(fn_node, frozenset()) | statics
+
+    def mark_ref(arg, statics):
+        if isinstance(arg, ast.Lambda):
+            mark(arg, statics)
+        elif isinstance(arg, ast.Name):
+            for fn in defs.get(arg.id, ()):
+                mark(fn, statics)
+        elif isinstance(arg, ast.Call) and \
+                _is_wrapper(ctx, arg.func, _PARTIAL) and arg.args:
+            mark_ref(arg.args[0], statics)
+
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                if _is_wrapper(ctx, dec, _JIT_WRAPPERS + _PALLAS_WRAPPERS):
+                    mark(node, frozenset())
+                elif isinstance(dec, ast.Call):
+                    if _is_wrapper(ctx, dec.func,
+                                   _JIT_WRAPPERS + _PALLAS_WRAPPERS):
+                        mark(node, _static_argnames(dec))
+                    elif _is_wrapper(ctx, dec.func, _PARTIAL) and dec.args \
+                            and _is_wrapper(ctx, dec.args[0], _JIT_WRAPPERS):
+                        mark(node, _static_argnames(dec))
+        elif isinstance(node, ast.Call):
+            if _is_wrapper(ctx, node.func, _JIT_WRAPPERS) and node.args:
+                mark_ref(node.args[0], _static_argnames(node))
+            elif _is_wrapper(ctx, node.func, _PALLAS_WRAPPERS) and node.args:
+                mark_ref(node.args[0], frozenset())
+    return targets
+
+
+def _nearest_jit_target(ctx: FileContext, node: ast.AST, targets):
+    if node in targets:
+        return node
+    for anc in ctx.ancestors(node):
+        if anc in targets:
+            return anc
+    return None
+
+
+def _param_names(fn) -> list:
+    args = fn.args
+    return [a.arg for a in (args.posonlyargs + args.args + args.kwonlyargs)]
+
+
+# --------------------------------------------------------------------------
+# RPL001 — kernel-policy hygiene
+# --------------------------------------------------------------------------
+
+@rule("RPL001", "kernel-policy-hygiene",
+      "literal interpret= booleans outside kernels/backend.py")
+def check_interpret_literal(ctx: FileContext):
+    if ctx.path.endswith("kernels/backend.py"):
+        return
+    msg = ("literal `interpret={val}` pins the Pallas mode at the call site "
+           "(the PR 7 flash_attention bug class); pass interpret=None and "
+           "resolve through KernelPolicy/use_policy (repro.kernels.backend)")
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Call):
+            for kw in node.keywords:
+                if kw.arg == "interpret" and isinstance(kw.value, ast.Constant) \
+                        and isinstance(kw.value.value, bool):
+                    yield kw.value, msg.format(val=kw.value.value)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.Lambda)):
+            args = node.args
+            pos = args.posonlyargs + args.args
+            for name, default in zip(pos[len(pos) - len(args.defaults):],
+                                     args.defaults, strict=True):
+                if name.arg == "interpret" and \
+                        isinstance(default, ast.Constant) and \
+                        isinstance(default.value, bool):
+                    yield default, (
+                        f"`interpret: ... = {default.value}` default "
+                        "hardcodes the Pallas mode; default to None and "
+                        "resolve through KernelPolicy/resolve_interpret")
+            for name, default in zip(args.kwonlyargs, args.kw_defaults,
+                                     strict=True):
+                if name.arg == "interpret" and default is not None and \
+                        isinstance(default, ast.Constant) and \
+                        isinstance(default.value, bool):
+                    yield default, (
+                        f"`interpret: ... = {default.value}` default "
+                        "hardcodes the Pallas mode; default to None and "
+                        "resolve through KernelPolicy/resolve_interpret")
+
+
+# --------------------------------------------------------------------------
+# RPL002 — overflow-bound guards on raw GF kernel entry calls
+# --------------------------------------------------------------------------
+
+_KERNEL_ENTRIES = {"scan_syndromes", "gf_matmul", "encode_words"}
+_KERNEL_MODULES = ("repro.kernels.ops", "repro.kernels")
+
+
+def _bound_guard_expr(node: ast.AST) -> bool:
+    """True for an expression that reads as an accumulator-bound check:
+    it mentions a squared term (`(p-1)**2`) together with a `2**24`/`2**31`
+    style limit, or names a *_BOUND constant."""
+    has_square = has_limit = False
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.BinOp) and isinstance(sub.op, ast.Pow):
+            exp = sub.right
+            base = sub.left
+            if isinstance(exp, ast.Constant) and exp.value == 2:
+                has_square = True
+            if isinstance(base, ast.Constant) and base.value == 2 and \
+                    isinstance(exp, ast.Constant) and \
+                    isinstance(exp.value, int) and exp.value >= 16:
+                has_limit = True
+        elif isinstance(sub, ast.Name) and "BOUND" in sub.id.upper():
+            has_square = has_limit = True
+        elif isinstance(sub, ast.Attribute) and "BOUND" in sub.attr.upper():
+            has_square = has_limit = True
+    return has_square and has_limit
+
+
+def _guard_scope(ctx: FileContext, node: ast.AST) -> ast.AST:
+    """Where a bound guard counts as reachable: the outermost enclosing
+    class if any (shared helpers like `MemoryController._scan_route` guard
+    for every method), else the outermost enclosing function, else the
+    module."""
+    best = None
+    for anc in ctx.ancestors(node):
+        if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef,
+                            ast.Lambda, ast.ClassDef)):
+            best = anc
+    return best if best is not None else ctx.tree
+
+
+def _scope_has_bound_guard(scope: ast.AST) -> bool:
+    for sub in ast.walk(scope):
+        if isinstance(sub, (ast.Assert, ast.If, ast.IfExp, ast.While)) and \
+                _bound_guard_expr(sub.test):
+            return True
+        if isinstance(sub, ast.Compare) and _bound_guard_expr(sub):
+            return True
+    return False
+
+
+@rule("RPL002", "overflow-bound-guard",
+      "raw GF kernel entry calls without a reachable K*(p-1)**2 bound check")
+def check_overflow_bounds(ctx: FileContext):
+    if "repro/kernels/" in ctx.path:
+        return
+    guard_cache: dict[int, bool] = {}
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        qn = ctx.qualname(node.func)
+        if qn is None:
+            continue
+        tail = qn.rsplit(".", 1)[-1]
+        from_kernels = qn.startswith(_KERNEL_MODULES)
+        if tail.endswith("_pallas") and from_kernels:
+            yield node, (
+                f"raw Pallas kernel `{tail}` called outside repro.kernels; "
+                "route through the repro.kernels.ops wrapper (padding + "
+                "policy resolution + accumulator-bound assert)")
+            continue
+        if tail in _KERNEL_ENTRIES and from_kernels:
+            scope = _guard_scope(ctx, node)
+            key = id(scope)
+            if key not in guard_cache:
+                guard_cache[key] = _scope_has_bound_guard(scope)
+            if not guard_cache[key]:
+                yield node, (
+                    f"`{tail}` called with no reachable K*(p-1)**2 "
+                    "accumulator-bound guard in the enclosing scope; the "
+                    "int32 kernel accumulator wraps silently past 2**31 "
+                    "(float32 BLAS past 2**24) — guard the bound or route "
+                    "through MemoryController/PagedProtectedStore")
+
+
+# --------------------------------------------------------------------------
+# RPL003 — trace purity inside jit / pallas targets
+# --------------------------------------------------------------------------
+
+_IMPURE_MODULES = ("random", "time", "numpy.random")
+
+
+@rule("RPL003", "trace-purity",
+      "host-impure Python inside jax.jit / pl.pallas_call targets")
+def check_trace_purity(ctx: FileContext):
+    targets = _jit_targets(ctx)
+    if not targets:
+        return
+    for fn in targets:
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.Lambda)):
+            continue
+        args = fn.args
+        pos = args.posonlyargs + args.args
+        for name, default in list(zip(pos[len(pos) - len(args.defaults):],
+                                      args.defaults, strict=True)) + \
+                [(n, d) for n, d in zip(args.kwonlyargs, args.kw_defaults,
+                                        strict=True) if d is not None]:
+            if isinstance(default, (ast.List, ast.Dict, ast.Set)) or (
+                    isinstance(default, ast.Call) and
+                    isinstance(default.func, ast.Name) and
+                    default.func.id in ("list", "dict", "set")):
+                yield default, (
+                    f"mutable default `{name.arg}=...` on a jitted function "
+                    "is captured once at trace time and shared across calls")
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        target = _nearest_jit_target(ctx, node, targets)
+        if target is None:
+            continue
+        qn = ctx.qualname(node.func)
+        if qn is not None:
+            root = qn.split(".")[0]
+            mod = qn.rsplit(".", 1)[0] if "." in qn else qn
+            if root in ("random", "time") and ctx.imports.get(root) == root \
+                    and "." in qn:
+                yield node, (
+                    f"`{qn}` inside a jitted function runs on the host at "
+                    "trace time only — its value is baked into the cached "
+                    "trace, not refreshed per call")
+                continue
+            if mod.startswith("numpy.random") or qn.startswith("numpy.random"):
+                yield node, (
+                    f"`{qn}` inside a jitted function draws host entropy at "
+                    "trace time; use jax.random with an explicit key")
+                continue
+        if isinstance(node.func, ast.Attribute) and node.func.attr == "item" \
+                and not node.args:
+            yield node, (
+                "`.item()` inside a jitted function forces a host sync / "
+                "concretization error on traced values")
+            continue
+        if isinstance(node.func, ast.Name) and \
+                node.func.id in ("float", "int", "bool") and \
+                len(node.args) == 1 and isinstance(node.args[0], ast.Name):
+            statics = targets[target]
+            params = _param_names(target)
+            argname = node.args[0].id
+            if argname in params and argname not in statics:
+                yield node, (
+                    f"`{node.func.id}({argname})` coerces a traced parameter "
+                    "inside a jitted function (concretization error / "
+                    "silently baked constant); hoist it out of the trace or "
+                    "mark the parameter static")
+
+
+# --------------------------------------------------------------------------
+# RPL004 — jit-cache hygiene
+# --------------------------------------------------------------------------
+
+def _has_cache_write(fn: ast.AST) -> bool:
+    """A per-call jit construction is fine when the function memoizes it:
+    any assignment into an attribute or subscript (self._fn = ..., or
+    cache[key] = ...) counts as the cache write."""
+    for sub in ast.walk(fn):
+        if isinstance(sub, ast.Assign):
+            targets = sub.targets
+        elif isinstance(sub, (ast.AugAssign, ast.AnnAssign)):
+            targets = [sub.target]
+        else:
+            continue
+        for t in targets:
+            for leaf in ast.walk(t):
+                if isinstance(leaf, (ast.Attribute, ast.Subscript)):
+                    return True
+    return False
+
+
+@rule("RPL004", "jit-cache-hygiene",
+      "jax.jit constructed where every call retraces")
+def check_jit_cache(ctx: FileContext):
+    for node in ast.walk(ctx.tree):
+        if not (isinstance(node, ast.Call) and
+                _is_wrapper(ctx, node.func, ("jax.jit", "jit"))):
+            continue
+        parent = ctx.parent(node)
+        if isinstance(parent, ast.Call) and parent.func is node:
+            yield node, (
+                "`jax.jit(f)(...)` constructs and traces a fresh executable "
+                "on every call; build the jitted callable once and reuse it")
+            continue
+        in_loop = False
+        for anc in ctx.ancestors(node):
+            if isinstance(anc, _SCOPES):
+                break
+            if isinstance(anc, _LOOPS):
+                in_loop = True
+                break
+        if in_loop:
+            yield node, (
+                "`jax.jit(...)` constructed inside a loop retraces every "
+                "iteration; hoist the construction out of the loop")
+            continue
+        fn = _enclosing_function(ctx, node)
+        if fn is None or isinstance(fn, ast.Lambda):
+            continue
+        parent_scope = ctx.parent(fn)
+        is_method = isinstance(parent_scope, ast.ClassDef)
+        if is_method and fn.name not in ("__init__", "__post_init__") \
+                and not _has_cache_write(fn):
+            yield node, (
+                f"`jax.jit(...)` built per call in method `{fn.name}` with "
+                "no cache write; memoize the executable (see "
+                "MemoryController._decoder) or construct it in __init__")
+
+
+# --------------------------------------------------------------------------
+# RPL005 — telemetry hot-path contract
+# --------------------------------------------------------------------------
+
+_HOT_PACKAGES = ("repro/memory/", "repro/serving/", "repro/models/",
+                 "repro/core/")
+_INSTRUMENTS = {"counter", "gauge", "histogram", "observe_scan",
+                "observe_decode", "instant"}
+
+
+def _mentions_enabled(node: ast.AST) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Attribute) and sub.attr == "enabled":
+            return True
+        if isinstance(sub, ast.Call) and isinstance(sub.func, ast.Name) and \
+                sub.func.id == "getattr" and any(
+                    isinstance(a, ast.Constant) and a.value == "enabled"
+                    for a in sub.args):
+            return True
+    return False
+
+
+def _early_out_guard(fn: ast.AST, before_line: int) -> bool:
+    """`if not reg.enabled: return` style guard lexically before the call
+    in the same function body."""
+    for sub in ast.walk(fn):
+        if not isinstance(sub, ast.If) or sub.lineno >= before_line:
+            continue
+        if not _mentions_enabled(sub.test):
+            continue
+        if any(isinstance(s, (ast.Return, ast.Continue, ast.Raise))
+               for s in sub.body):
+            return True
+    return False
+
+
+@rule("RPL005", "telemetry-hot-path",
+      "unguarded instrument calls in the hot-path packages")
+def check_telemetry_guard(ctx: FileContext):
+    if not any(pkg in ctx.path for pkg in _HOT_PACKAGES):
+        return
+    for node in ast.walk(ctx.tree):
+        if not (isinstance(node, ast.Call) and
+                isinstance(node.func, ast.Attribute) and
+                node.func.attr in _INSTRUMENTS):
+            continue
+        guarded = False
+        for anc in ctx.ancestors(node):
+            if isinstance(anc, (ast.If, ast.IfExp)) and \
+                    _mentions_enabled(anc.test):
+                guarded = True
+                break
+            if isinstance(anc, _SCOPES):
+                if not isinstance(anc, ast.Lambda) and \
+                        _early_out_guard(anc, node.lineno):
+                    guarded = True
+                break
+        if not guarded:
+            yield node, (
+                f"instrument call `.{node.func.attr}(...)` in a hot-path "
+                "package without an `.enabled` guard; the repro.obs "
+                "contract is allocation-free when telemetry is off — wrap "
+                "in `if reg.enabled:` (or an early-out guard)")
+
+
+# --------------------------------------------------------------------------
+# RPL006 — deprecated APIs
+# --------------------------------------------------------------------------
+
+_BACKEND_CTORS = {"PagedProtectedStore", "PooledStore", "ProtectedPagePool",
+                  "MemoryController"}
+
+
+@rule("RPL006", "deprecated-api",
+      "removed backend=/scan_backend= kwargs and {'paged': ...} routing")
+def check_deprecated_api(ctx: FileContext):
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        callee = ctx.dotted(node.func)
+        callee_tail = callee.rsplit(".", 1)[-1] if callee else ""
+        for kw in node.keywords:
+            if kw.arg == "scan_backend":
+                yield kw.value, (
+                    "`scan_backend=` was removed in PR 8; pass "
+                    "`policy=` (KernelPolicy) — see "
+                    "policy_from_scan_backend for the legacy mapping")
+            elif kw.arg == "backend" and callee_tail in _BACKEND_CTORS:
+                yield kw.value, (
+                    f"`backend=` on {callee_tail} was removed in PR 8; pass "
+                    "`policy=` (KernelPolicy) — see "
+                    "policy_from_store_backend for the legacy mapping")
+        for arg in list(node.args) + [kw.value for kw in node.keywords]:
+            if isinstance(arg, ast.Dict) and any(
+                    isinstance(k, ast.Constant) and k.value == "paged"
+                    for k in arg.keys):
+                yield arg, (
+                    "legacy `{'paged': layer}` dict routing is deprecated; "
+                    "pass the KVSource object directly (repro.nn.kv_source)")

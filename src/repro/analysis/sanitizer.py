@@ -1,0 +1,144 @@
+"""Runtime sanitizer: `jax.checkify` assertions on the GF/Pallas entry
+points, behind a `use_sanitizer` ambient mirroring `use_policy`.
+
+The GF pipeline's failure mode is *silent*: an out-of-range symbol still
+flows through `(y @ Ht) % p`, a NaN query poisons the online-softmax
+`m/l/acc` recurrence without raising, a negative quantization scale just
+flips signs. The paper's NB-LDPC scheme exists because PIM hardware has the
+same property — arithmetic faults corrupt results without faulting. This
+module gives the software stack hard errors instead:
+
+    from repro.analysis import use_sanitizer
+    with use_sanitizer():
+        ops.scan_syndromes(y, ht, p)        # raises SanitizerError on y >= p
+        ops.attend_protected(...)           # raises on non-finite output
+
+Checks are wired into `repro.kernels.ops` (`gf_matmul`, `encode_words`,
+`scan_syndromes`, `attend_protected`) and `repro.core.decode
+.decode_integers` (output-side there: received words are raw arithmetic
+levels that legitimately drift outside [0, p) — the decoder's *products*
+carry the alphabet invariant). Each check is a cached
+`jax.jit(checkify.checkify(...))`
+executable, so the sanitized path stays fully device-side; when the
+sanitizer is off every entry point pays exactly one module-level bool read.
+
+Scope: checks run on *eager* entry calls — values reaching an entry point
+under an enclosing `jax.jit` trace are tracers whose checkify error cannot
+be thrown host-side, so they are skipped (same convention as the
+`repro.obs` estimator feed in `decode_integers`). Tier-1 tests and the
+benches call the entry points eagerly, which is where the sanitizer earns
+its keep.
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import checkify
+
+__all__ = ["use_sanitizer", "sanitizer_enabled", "check_gf_symbols",
+           "check_finite", "check_quant_scales", "SanitizerError"]
+
+SanitizerError = checkify.JaxRuntimeError
+
+# REPRO_SANITIZE=1 arms the ambient at import — the CI sanitizer-smoke step
+# (and any TPU-validation bench run) uses this to sweep an existing test
+# subset under the checks without touching its code.
+_enabled = os.environ.get("REPRO_SANITIZE", "") == "1"
+
+
+def sanitizer_enabled() -> bool:
+    """One cheap read per entry-point call (mirrors `registry.enabled`)."""
+    return _enabled
+
+
+@contextlib.contextmanager
+def use_sanitizer(enabled: bool = True):
+    """Install (or, with `enabled=False`, suspend) the runtime sanitizer
+    for the block. Nests and restores like `use_policy`."""
+    global _enabled
+    prev = _enabled
+    _enabled = bool(enabled)
+    try:
+        yield
+    finally:
+        _enabled = prev
+
+
+def _skip(arr) -> bool:
+    """Tracers can't throw host-side; empty arrays have no min/max."""
+    return isinstance(arr, jax.core.Tracer) or arr.size == 0
+
+
+@functools.partial(jax.jit, static_argnames=("p", "what"))
+def _gf_checked(arr, *, p: int, what: str):
+    def impl(a):
+        ok = jnp.all((a >= 0) & (a < p))
+        checkify.check(
+            ok,
+            f"sanitizer[{what}]: GF symbol outside [0, {p}): "
+            "min={mn}, max={mx}",
+            mn=jnp.min(a), mx=jnp.max(a))
+        return jnp.int32(0)
+    err, _ = checkify.checkify(impl, errors=checkify.user_checks)(arr)
+    return err
+
+
+@functools.partial(jax.jit, static_argnames=("what",))
+def _finite_checked(arr, *, what: str):
+    def impl(a):
+        checkify.check(
+            jnp.all(jnp.isfinite(a)),
+            f"sanitizer[{what}]: non-finite value "
+            "(nan_count={nans}, inf_count={infs})",
+            nans=jnp.sum(jnp.isnan(a)), infs=jnp.sum(jnp.isinf(a)))
+        return jnp.int32(0)
+    err, _ = checkify.checkify(impl, errors=checkify.user_checks)(arr)
+    return err
+
+
+@functools.partial(jax.jit, static_argnames=("what",))
+def _scales_checked(arr, *, what: str):
+    def impl(a):
+        checkify.check(
+            jnp.all(jnp.isfinite(a) & (a >= 0)),
+            f"sanitizer[{what}]: quantization scale must be finite and "
+            ">= 0 (zero marks an empty/padded page): min={mn}",
+            mn=jnp.min(a))
+        return jnp.int32(0)
+    err, _ = checkify.checkify(impl, errors=checkify.user_checks)(arr)
+    return err
+
+
+def check_gf_symbols(arr, p: int, what: str = "gf") -> None:
+    """Raise `SanitizerError` unless every symbol sits in `[0, p)`."""
+    if not _enabled:
+        return
+    arr = jnp.asarray(arr)
+    if _skip(arr):
+        return
+    _gf_checked(arr, p=int(p), what=str(what)).throw()
+
+
+def check_finite(arr, what: str = "tensor") -> None:
+    """Raise `SanitizerError` on any NaN/Inf in a float tensor."""
+    if not _enabled:
+        return
+    arr = jnp.asarray(arr)
+    if _skip(arr) or not jnp.issubdtype(arr.dtype, jnp.floating):
+        return
+    _finite_checked(arr, what=str(what)).throw()
+
+
+def check_quant_scales(arr, what: str = "scales") -> None:
+    """Raise `SanitizerError` on non-finite or negative quantization
+    scales (scale 0 is the legal padded/empty-page marker)."""
+    if not _enabled:
+        return
+    arr = jnp.asarray(arr)
+    if _skip(arr):
+        return
+    _scales_checked(arr, what=str(what)).throw()

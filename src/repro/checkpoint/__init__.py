@@ -26,7 +26,7 @@ import json
 import os
 import shutil
 import time
-from typing import Any, Dict, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -35,7 +35,7 @@ import numpy as np
 from repro.memory import Channel, ProtectedMemoryArray, StoredTensor
 
 
-def _flatten(tree) -> Dict[str, Any]:
+def _flatten(tree) -> dict[str, Any]:
     flat, _ = jax.tree_util.tree_flatten_with_path(tree)
     out = {}
     for path, leaf in flat:
@@ -45,10 +45,10 @@ def _flatten(tree) -> Dict[str, Any]:
     return out
 
 
-def _unflatten_into(template, flat: Dict[str, np.ndarray]):
+def _unflatten_into(template, flat: dict[str, np.ndarray]):
     paths, treedef = jax.tree_util.tree_flatten_with_path(template)
     leaves = []
-    for path, leaf in paths:
+    for path, _leaf in paths:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
                        for p in path)
         if key not in flat:
@@ -57,7 +57,7 @@ def _unflatten_into(template, flat: Dict[str, np.ndarray]):
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
-def _checksum(arrs: Dict[str, np.ndarray]) -> str:
+def _checksum(arrs: dict[str, np.ndarray]) -> str:
     h = hashlib.sha256()
     for k in sorted(arrs):
         h.update(k.encode())
@@ -77,7 +77,7 @@ def _protected_memory() -> ProtectedMemoryArray:
                                 damping=0.3)
 
 
-def _stored_to_npz(st: StoredTensor) -> Dict[str, np.ndarray]:
+def _stored_to_npz(st: StoredTensor) -> dict[str, np.ndarray]:
     return {"enc": st.enc, "nbytes": np.asarray([st.nbytes]),
             "dtype": str(st.dtype), "shape": np.asarray(st.shape, np.int64)}
 
@@ -89,7 +89,7 @@ def _npz_to_stored(z) -> StoredTensor:
 
 
 def inject_storage_faults(directory: str, channel: Channel, *,
-                          key: int = 0, step: Optional[int] = None,
+                          key: int = 0, step: int | None = None,
                           t: float = 0.0, n_reads: int = 0) -> int:
     """Corrupt a protected checkpoint's stored codewords in place through a
     `repro.memory.channel` model (the supported way to simulate storage rot
@@ -123,7 +123,7 @@ def inject_storage_faults(directory: str, channel: Channel, *,
 # -- public API --------------------------------------------------------------
 
 
-def save_checkpoint(directory: str, step: int, tree, *, extra: Optional[dict]
+def save_checkpoint(directory: str, step: int, tree, *, extra: dict | None
                     = None, protect: bool = False, keep: int = 3) -> str:
     """Atomically persist `tree` (params/opt state/...) at `step`."""
     os.makedirs(directory, exist_ok=True)
@@ -167,7 +167,7 @@ def save_checkpoint(directory: str, step: int, tree, *, extra: Optional[dict]
     return final
 
 
-def latest_step(directory: str) -> Optional[int]:
+def latest_step(directory: str) -> int | None:
     if not os.path.isdir(directory):
         return None
     steps = [int(d.split("_")[1]) for d in os.listdir(directory)
@@ -175,7 +175,7 @@ def latest_step(directory: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
-def restore_checkpoint(directory: str, template, *, step: Optional[int] = None,
+def restore_checkpoint(directory: str, template, *, step: int | None = None,
                        shardings=None, correct: bool = True):
     """Restore into `template`'s structure. `shardings`: optional pytree of
     Sharding (tree-prefix ok) for elastic re-placement onto the current mesh.
@@ -190,7 +190,7 @@ def restore_checkpoint(directory: str, template, *, step: Optional[int] = None,
     mem = None
     if manifest["protected"]:
         if manifest.get("prot_version") != _PROT_VERSION:
-            raise IOError(
+            raise OSError(
                 f"checkpoint {d} uses protected-payload format "
                 f"{manifest.get('prot_version')}; this build reads "
                 f"version {_PROT_VERSION}")
@@ -213,9 +213,9 @@ def restore_checkpoint(directory: str, template, *, step: Optional[int] = None,
         manifest["correction_stats"] = mem.stats.as_dict()
     if _checksum(flat) != manifest["checksum"]:
         if not manifest["protected"]:
-            raise IOError(f"checkpoint {d} failed checksum verification")
+            raise OSError(f"checkpoint {d} failed checksum verification")
         if correct:
-            raise IOError(f"checkpoint {d} failed post-correction checksum "
+            raise OSError(f"checkpoint {d} failed post-correction checksum "
                           "(storage errors exceeded the code's strength)")
 
     tree = _unflatten_into(template, flat)

@@ -12,7 +12,6 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from typing import Optional, Tuple
 
 ARCH_IDS = [
     "deepseek_coder_33b", "granite_3_2b", "gemma2_27b", "mistral_large_123b",
@@ -38,7 +37,7 @@ class PIMSpec:
     mode: str = "correct"              # off | detect | correct
     n_iters: int = 4
     damping: float = 0.3
-    targets: Tuple[str, ...] = ("mlp_down", "attn_o")
+    targets: tuple[str, ...] = ("mlp_down", "attn_o")
     row_parallelism: int = 64
     adc_levels: int = 0
     use_kernels: bool = False          # dispatch FBP to the Pallas kernel
@@ -59,7 +58,7 @@ class ArchConfig:
     head_dim: int
     vocab_size: int
     d_ff: int
-    group_spec: Tuple[LayerSpec, ...]
+    group_spec: tuple[LayerSpec, ...]
     n_groups: int
     # --- MoE ---
     n_experts: int = 0
@@ -110,9 +109,9 @@ class ArchConfig:
     def dt_rank(self) -> int:
         return max(1, (self.d_model + 15) // 16)
 
-    def reduced(self, *, n_groups: int = 1, encoder_groups: Optional[int] = None,
-                d_model: int = 64, n_heads: int = 4, n_kv_heads: Optional[int] = None,
-                d_ff: int = 128, vocab: int = 512, n_experts: Optional[int] = None,
+    def reduced(self, *, n_groups: int = 1, encoder_groups: int | None = None,
+                d_model: int = 64, n_heads: int = 4, n_kv_heads: int | None = None,
+                d_ff: int = 128, vocab: int = 512, n_experts: int | None = None,
                 **kw) -> "ArchConfig":
         """A tiny same-family config for CPU smoke tests."""
         nkv = n_kv_heads or min(self.n_kv_heads, n_heads)

@@ -20,7 +20,6 @@ so the BER / efficiency comparisons are apples-to-apples:
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
 
 import numpy as np
 import jax
@@ -61,7 +60,7 @@ class HammingSECDED:
         word[..., -1] = word[..., :-1].sum(-1) % 2
         return word
 
-    def decode(self, word: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    def decode(self, word: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
         """-> (corrected data bits, uncorrectable flag)."""
         pos = _hamming_positions(self.n_data)
         nbits = word.shape[-1] - 1
@@ -103,7 +102,7 @@ class ModuloParity:
              - Y[..., -1].astype(jnp.int32)) % self.q
         return s != 0
 
-    def correct(self, Y: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    def correct(self, Y: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
         """±1 single-error correction: if the residue mismatch is ±1 mod q and
         exactly one column is implicated (unknowable without more structure —
         the scheme can only fix errors in the *checksum* residue class),

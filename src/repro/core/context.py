@@ -18,7 +18,6 @@ analogue of the paper's N_P-cores-per-decoder sharing (DESIGN.md §3).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -31,7 +30,7 @@ from .protected import (ProtectionConfig, protected_pim_matmul,
 
 
 class PIMContext:
-    def __init__(self, spec: PIMSpec, key: Optional[jax.Array] = None,
+    def __init__(self, spec: PIMSpec, key: jax.Array | None = None,
                  act_levels: int = 7):
         self.spec = spec
         self.targets = set(spec.targets)
@@ -94,8 +93,8 @@ class PIMContext:
         return W_enc.astype(jnp.int8), alpha.astype(jnp.float32)
 
     def matmul(self, x: jnp.ndarray, W: jnp.ndarray, name: str,
-               enc: Optional[jnp.ndarray] = None,
-               alpha: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+               enc: jnp.ndarray | None = None,
+               alpha: jnp.ndarray | None = None) -> jnp.ndarray:
         """x: (..., n_in) activations; W: (n_in, n_out) fp weights.
         Returns (..., n_out) in x.dtype via the protected PIM path.
         With `enc`/`alpha` (precoded deployment) the fp weights are not

@@ -41,12 +41,15 @@ downstream consumers see one shape either way.
 from __future__ import annotations
 
 import functools
-from typing import Callable, NamedTuple, Optional
+from collections.abc import Callable
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.sanitizer import (check_finite, check_gf_symbols,
+                                      sanitizer_enabled)
 from .construction import LDPCCode
 from .llv import NEG_INF, init_llv, normalize_llv, reinterpret
 
@@ -245,7 +248,7 @@ def _one_iteration(code: LDPCCode, consts, prior, msgs_cv, cn_fbp: Callable):
 
 def decode_llv(code: LDPCCode, prior: jnp.ndarray, *, n_iters: int = 10,
                early_exit: bool = False, damping: float = 0.0,
-               cn_fbp: Optional[Callable] = None) -> DecodeResult:
+               cn_fbp: Callable | None = None) -> DecodeResult:
     """Iteratively decode from prior LLVs. prior: (B, n, p).
 
     damping in [0, 1): new messages are blended with the previous iteration's
@@ -318,7 +321,7 @@ def decode_llv(code: LDPCCode, prior: jnp.ndarray, *, n_iters: int = 10,
 def decode_integers(code: LDPCCode, y: jnp.ndarray, *, n_iters: int = 10,
                     llv_scale: float = 4.0, llv_mode: str = "manhattan",
                     early_exit: bool = False, damping: float = 0.0,
-                    cn_fbp: Optional[Callable] = None):
+                    cn_fbp: Callable | None = None):
     """Full arithmetic-code pipeline for received integer words y (B, n):
     LLV init -> iterative decode -> nearest-representative reinterpretation.
 
@@ -328,6 +331,14 @@ def decode_integers(code: LDPCCode, y: jnp.ndarray, *, n_iters: int = 10,
     res = decode_llv(code, prior, n_iters=n_iters, early_exit=early_exit,
                      damping=damping, cn_fbp=cn_fbp)
     y_corr = reinterpret(y, res.symbols, code.p)
+    if sanitizer_enabled():
+        # No range check on `y`: received words are raw arithmetic levels
+        # that legitimately drift outside [0, p) (the MLC failure model the
+        # Manhattan/Gaussian LLV init exists for). The GF-alphabet invariant
+        # holds for what the decoder *produces*; the LLV totals must stay
+        # finite or the max-plus recurrence was poisoned.
+        check_gf_symbols(res.symbols, code.p, "decode_integers symbols")
+        check_finite(res.llv_totals, "decode_integers llv totals")
     _observe_decode(res, n_iters)
     return y_corr, res
 

@@ -16,7 +16,6 @@ deterministic and testable; kernels receive pre-drawn noise tensors.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -70,7 +69,7 @@ def adc_quantize(partial: jnp.ndarray, cfg: PIMConfig) -> jnp.ndarray:
 
 
 def pim_mac(x: jnp.ndarray, W: jnp.ndarray, cfg: PIMConfig,
-            key: Optional[jax.Array] = None) -> jnp.ndarray:
+            key: jax.Array | None = None) -> jnp.ndarray:
     """Simulated PIM VMM:  Y = X · W  (paper Eq. 1 / Eq. 4).
 
     x: (B, n_in) integers (bit-serial input values), W: (n_in, n_out) integer

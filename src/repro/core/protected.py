@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -47,7 +47,7 @@ class ProtectedResult(NamedTuple):
 
 def protected_pim_matmul(x: jnp.ndarray, W_enc: jnp.ndarray, code: LDPCCode,
                          prot: ProtectionConfig, pim_cfg: PIMConfig,
-                         key: Optional[jax.Array] = None,
+                         key: jax.Array | None = None,
                          cn_fbp=None) -> ProtectedResult:
     """x: (B, n_in) ints; W_enc: (n_in, nb * code.n) encoded weights."""
     B = x.shape[0]
@@ -94,7 +94,7 @@ def strip_padding(y: jnp.ndarray, n_out: int) -> jnp.ndarray:
 def protected_pim_matmul_budgeted(x: jnp.ndarray, W_enc: jnp.ndarray,
                                   code: LDPCCode, prot: ProtectionConfig,
                                   pim_cfg: PIMConfig,
-                                  key: Optional[jax.Array] = None,
+                                  key: jax.Array | None = None,
                                   budget: int = 16,
                                   cn_fbp=None) -> ProtectedResult:
     """Detect-then-correct with a fixed decode budget (serving fast path).

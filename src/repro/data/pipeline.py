@@ -14,7 +14,7 @@ enough structure that the end-to-end training example shows a real loss curve
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+from collections.abc import Iterator
 
 import numpy as np
 
@@ -53,7 +53,7 @@ class TokenPipeline:
         self._state_shift = rng.integers(0, V, size=S)   # state-dep. rotation
         self._mix = 0.5                                   # chain vs unigram
 
-    def _sample_batch(self, step: int) -> Dict[str, np.ndarray]:
+    def _sample_batch(self, step: int) -> dict[str, np.ndarray]:
         c = self.cfg
         bs = c.global_batch // self.num_shards
         # key derived from (seed, step, shard): restart-stable, shard-disjoint
@@ -72,10 +72,10 @@ class TokenPipeline:
         return {"tokens": toks[:, :-1].astype(np.int32),
                 "labels": toks[:, 1:].astype(np.int32)}
 
-    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+    def __iter__(self) -> Iterator[dict[str, np.ndarray]]:
         return self
 
-    def __next__(self) -> Dict[str, np.ndarray]:
+    def __next__(self) -> dict[str, np.ndarray]:
         batch = self._sample_batch(self.step)
         self.step += 1
         return batch

@@ -21,7 +21,8 @@ from __future__ import annotations
 import dataclasses
 import logging
 import time
-from typing import Any, Callable, Optional
+from collections.abc import Callable
+from typing import Any
 
 import jax
 
@@ -33,14 +34,14 @@ log = logging.getLogger("repro.fault")
 
 class StragglerWatchdog:
     def __init__(self, threshold: float = 2.0, alpha: float = 0.1,
-                 on_straggler: Optional[Callable[[int, float, float], None]]
+                 on_straggler: Callable[[int, float, float], None] | None
                  = None):
         self.threshold = threshold
         self.alpha = alpha
-        self.ewma: Optional[float] = None
+        self.ewma: float | None = None
         self.flagged: list[tuple[int, float]] = []
         self.on_straggler = on_straggler
-        self._t0: Optional[float] = None
+        self._t0: float | None = None
 
     def step_start(self):
         self._t0 = time.perf_counter()
@@ -86,13 +87,13 @@ class RestartManager:
         log.info("restored checkpoint step=%d from %s", step, self.directory)
         return state, step, manifest["extra"].get("data_state")
 
-    def maybe_save(self, step: int, state, data_state: Optional[dict] = None):
+    def maybe_save(self, step: int, state, data_state: dict | None = None):
         if step > 0 and step % self.save_every == 0:
             ckpt.save_checkpoint(self.directory, step, state,
                                  extra={"data_state": data_state},
                                  protect=self.protect)
 
-    def run(self, make_loop: Callable[[int, Optional[dict]], int],
+    def run(self, make_loop: Callable[[int, dict | None], int],
             init_fn: Callable[[], Any]):
         """Crash-resilient driver: `make_loop(start_step, data_state)` runs
         until done (returns final step) or raises; on exception we restore

@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import threading
 from contextlib import contextmanager
-from typing import Callable, Optional
+from collections.abc import Callable
 
 import jax
 import numpy as np
@@ -55,7 +55,7 @@ def rules_for(mesh: Mesh, *, seq_sharded_kv: bool = False) -> dict:
 
 
 @contextmanager
-def use_rules(mesh: Optional[Mesh], rules: Optional[dict] = None):
+def use_rules(mesh: Mesh | None, rules: dict | None = None):
     prev = getattr(_CTX, "state", None)
     if mesh is None:
         _CTX.state = None
@@ -67,7 +67,7 @@ def use_rules(mesh: Optional[Mesh], rules: Optional[dict] = None):
         _CTX.state = prev
 
 
-def active_mesh() -> Optional[Mesh]:
+def active_mesh() -> Mesh | None:
     st = getattr(_CTX, "state", None)
     return st[0] if st else None
 
@@ -125,11 +125,11 @@ def data_mesh(axis_name: str = "data") -> Mesh:
     return Mesh(np.array(jax.devices()), (axis_name,))
 
 
-def decode_sharded(code, y, *, mesh: Optional[Mesh] = None,
+def decode_sharded(code, y, *, mesh: Mesh | None = None,
                    axis_name: str = "data", n_iters: int = 10,
                    llv_scale: float = 4.0, llv_mode: str = "manhattan",
                    early_exit: bool = False, damping: float = 0.0,
-                   cn_fbp: Optional[Callable] = None):
+                   cn_fbp: Callable | None = None):
     """Shard batched integer decode across devices along the batch axis.
 
     y: (B, n) received integer words. B is padded to a multiple of the mesh
@@ -182,9 +182,9 @@ def shard_page(page, mesh: Mesh, axis_name: str = "data"):
     return jax.device_put(page, NamedSharding(mesh, P(axis_name)))
 
 
-def scan_syndromes_sharded(code, y, *, mesh: Optional[Mesh] = None,
+def scan_syndromes_sharded(code, y, *, mesh: Mesh | None = None,
                            axis_name: str = "data",
-                           interpret: Optional[bool] = None):
+                           interpret: bool | None = None):
     """Fan the fused scrub syndrome scan across devices along the batch axis.
 
     y: (B, n) stored level-words -> (B,) bool flagged mask. Like
@@ -196,6 +196,13 @@ def scan_syndromes_sharded(code, y, *, mesh: Optional[Mesh] = None,
     multi-device path for paged scrub sweeps.
     """
     from repro.kernels.ops import scan_syndromes
+
+    # the fused kernel accumulates int32: every per-word syndrome sum is
+    # bounded by n*(p-1)^2, which must stay below 2^31 on every shard (the
+    # MemoryController routes larger codes to its exact int64 host path)
+    assert code.n * (code.p - 1) ** 2 < 2 ** 31, (
+        f"scan_syndromes_sharded int32 bound exceeded: "
+        f"{code.n} * ({code.p}-1)^2 >= 2^31 — use the exact host scan")
 
     if mesh is None:
         mesh = data_mesh(axis_name)

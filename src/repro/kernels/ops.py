@@ -29,6 +29,8 @@ from . import gf_matmul as _gfm
 from . import pim_mac as _pm
 from .backend import resolve_interpret as _resolve_interpret
 from .backend import resolve_mode as _resolve_mode
+from repro.analysis.sanitizer import (check_finite, check_gf_symbols,
+                                      check_quant_scales, sanitizer_enabled)
 from repro.core.llv import NEG_INF
 
 
@@ -80,6 +82,11 @@ def _gf_matmul_jit(a: jnp.ndarray, b: jnp.ndarray, p: int, bm: int, bn: int,
                    bk: int, interpret: bool) -> jnp.ndarray:
     M, K = a.shape
     _, N = b.shape
+    # same int32 accumulator as scan_syndromes: every dot-product term is a
+    # product of two symbols in [0, p), so K*(p-1)^2 must stay below 2^31
+    # or the mod-p epilogue sees a wrapped sum and returns garbage
+    assert K * (p - 1) ** 2 < 2 ** 31, (
+        f"gf_matmul int32 bound exceeded: {K} * ({p}-1)^2 >= 2^31")
     bm_, bn_, bk_ = (min(bm, max(8, M)), min(bn, max(8, N)), min(bk, max(8, K)))
     a, _ = _pad_to(a, 0, bm_)
     a, _ = _pad_to(a, 1, bk_)
@@ -94,6 +101,9 @@ def gf_matmul(a: jnp.ndarray, b: jnp.ndarray, p: int, *, bm: int = 128,
               bn: int = 128, bk: int = 128,
               interpret: bool | None = None) -> jnp.ndarray:
     """(a @ b) % p with padding to MXU-aligned blocks."""
+    if sanitizer_enabled():
+        check_gf_symbols(a, p, "gf_matmul lhs")
+        check_gf_symbols(b, p, "gf_matmul rhs")
     return _gf_matmul_jit(a, b, p, bm, bn, bk, _resolve_interpret(interpret))
 
 
@@ -144,6 +154,8 @@ def scan_syndromes(y: jnp.ndarray, ht: jnp.ndarray, p: int, *, bm: int = 128,
     rows (zero words are valid codewords) and pad check columns (all-zero
     Hᵀ columns accumulate 0 ≡ 0 mod p) can never raise a flag.
     """
+    if sanitizer_enabled():
+        check_gf_symbols(y, p, "scan_syndromes words")
     return _scan_syndromes_jit(y, ht, p, bm, bk, _resolve_interpret(interpret))
 
 
@@ -252,14 +264,26 @@ def attend_protected(q, kpages, vpages, kscales, vscales, valid,
         valid = zpad(valid)
     kw = dict(p=int(p), k_info=int(k_info), page_shape=tuple(page_shape),
               softcap=float(softcap or 0.0), with_hot=bool(with_hot))
+    if sanitizer_enabled():
+        check_gf_symbols(kpages, p, "attend_protected K pages")
+        check_gf_symbols(vpages, p, "attend_protected V pages")
+        check_quant_scales(kscales, "attend_protected K scales")
+        check_quant_scales(vscales, "attend_protected V scales")
+        check_finite(q, "attend_protected query")
     mode = _resolve_mode(policy)
     if mode == "ref":
-        return _attend_protected_ref_jit(
+        out = _attend_protected_ref_jit(
             q, kpages, vpages, kscales, vscales, valid, hot_k, hot_v,
             hot_valid, **kw)
-    return _attend_protected_kernel_jit(
-        q, kpages, vpages, kscales, vscales, valid, hot_k, hot_v, hot_valid,
-        interpret=(mode != "compiled"), **kw)
+    else:
+        out = _attend_protected_kernel_jit(
+            q, kpages, vpages, kscales, vscales, valid, hot_k, hot_v,
+            hot_valid, interpret=(mode != "compiled"), **kw)
+    if sanitizer_enabled():
+        # a NaN that slipped into K/V/hot poisons the online-softmax
+        # m/l/acc recurrence without raising — surface it here
+        check_finite(out, "attend_protected output")
+    return out
 
 
 # ---------------------------------------------------------------------------

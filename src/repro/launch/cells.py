@@ -7,7 +7,6 @@ technique under serve load, used for §Perf hillclimbing).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -44,7 +43,7 @@ def settings_for(arch_id: str, shape: ShapeSpec) -> CellSettings:
                         fsdp_train=True, fsdp_serve=fsdp_serve)
 
 
-def skip_reason(arch_id: str, shape: ShapeSpec) -> Optional[str]:
+def skip_reason(arch_id: str, shape: ShapeSpec) -> str | None:
     cfg = get_config(arch_id)
     if shape.name == "long_500k" and not cfg.sub_quadratic:
         return ("pure full-attention arch: no sub-quadratic mechanism for "
@@ -75,7 +74,7 @@ def _aux_shape(cfg: ArchConfig, batch: int):
                                 jnp.float32)
 
 
-def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, object]:
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict[str, object]:
     """Model inputs for the cell's step function (train batch / prompt /
     decode token). Cache/param specs come from eval_shape in steps.py."""
     B, S = shape.global_batch, shape.seq_len

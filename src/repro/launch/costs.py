@@ -19,7 +19,6 @@ from __future__ import annotations
 import dataclasses
 import math
 import re
-from typing import Dict, List, Optional
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
@@ -52,7 +51,7 @@ def _shape_elems(dims: str) -> int:
     return math.prod(int(d) for d in dims.split(",") if d)
 
 
-def parse_collectives(hlo_text: str, total_devices: int) -> List[Collective]:
+def parse_collectives(hlo_text: str, total_devices: int) -> list[Collective]:
     out = []
     for m in _COLL_RE.finditer(hlo_text):
         _name, dtype, dims, kind = m.groups()
@@ -87,8 +86,8 @@ def parse_collectives(hlo_text: str, total_devices: int) -> List[Collective]:
     return out
 
 
-def collective_summary(colls: List[Collective]) -> Dict[str, float]:
-    s: Dict[str, float] = {}
+def collective_summary(colls: list[Collective]) -> dict[str, float]:
+    s: dict[str, float] = {}
     for c in colls:
         s[c.kind] = s.get(c.kind, 0.0) + c.wire_bytes
     s["total_wire_bytes"] = sum(c.wire_bytes for c in colls)

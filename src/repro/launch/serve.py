@@ -65,7 +65,8 @@ def main(argv=None):
     def place(dst, src):
         if dst.shape == src.shape:
             return src
-        pad = [(0, d - s) for d, s in zip(dst.shape, src.shape)]
+        pad = [(0, d - s) for d, s in zip(dst.shape, src.shape,
+                                          strict=True)]
         return jnp.pad(src, pad)
 
     caches = jax.tree.map(place, full, caches)

@@ -12,7 +12,7 @@ derived from the logical-axis trees in repro.models via the cell rules.
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -118,7 +118,7 @@ def build_train(cfg: ArchConfig, st: CellSettings, shape: ShapeSpec,
 # ---------------------------------------------------------------------------
 
 
-def _maybe_ctx(cfg: ArchConfig) -> Optional[PIMContext]:
+def _maybe_ctx(cfg: ArchConfig) -> PIMContext | None:
     return PIMContext(cfg.pim) if cfg.pim.enabled else None
 
 

@@ -26,7 +26,6 @@ framework's own systematic code — and decoded on read through the vectorized
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -56,13 +55,13 @@ class StoredTensor:
 class ProtectedMemoryArray:
     """A named store of tensors held as NB-LDPC codewords of one code."""
 
-    def __init__(self, code: Union[str, LDPCCode] = "wl1024_r08", *,
-                 controller: Union[str, MemoryController, None] = "basic",
-                 channel: Optional[Channel] = None, key: int = 0, **ctrl_kw):
+    def __init__(self, code: str | LDPCCode = "wl1024_r08", *,
+                 controller: str | MemoryController | None = "basic",
+                 channel: Channel | None = None, key: int = 0, **ctrl_kw):
         self.code = get_code(code) if isinstance(code, str) else code
         self.controller = make_controller(controller, **ctrl_kw)
         self.channel = channel
-        self._store: Dict[str, StoredTensor] = {}
+        self._store: dict[str, StoredTensor] = {}
         self._key = jax.random.PRNGKey(key)
         self._injections = 0
 
@@ -127,8 +126,8 @@ class ProtectedMemoryArray:
 
     # -- fault injection / maintenance --------------------------------------
 
-    def inject(self, channel: Optional[Channel] = None,
-               key: Union[int, jax.Array, None] = None, *, t: float = 0.0,
+    def inject(self, channel: Channel | None = None,
+               key: int | jax.Array | None = None, *, t: float = 0.0,
                n_reads: int = 0) -> int:
         """Corrupt the stored words in place through a channel model. `key`
         is a PRNG key or a plain int seed. Returns the number of cells
@@ -158,13 +157,13 @@ class ProtectedMemoryArray:
             st.enc = new
         return changed
 
-    def iter_pages(self, page_words: Optional[int] = None):
+    def iter_pages(self, page_words: int | None = None):
         """Writable (b, n) pages over the stored words (`page_words` rows
         per page; one page per tensor when None) — the streaming surface
         for `scrub_pages` and external scrub services."""
         return self.controller.iter_pages(self._store, page_words)
 
-    def scrub(self, *, page_words: Optional[int] = None) -> dict:
+    def scrub(self, *, page_words: int | None = None) -> dict:
         """Explicit full sweep (any policy): scan + repair storage.
         `page_words` streams the sweep in fixed-size pages (incremental
         scrubbing for arrays larger than device memory)."""

@@ -24,7 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Optional, Sequence
+from collections.abc import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -58,7 +58,7 @@ class ResidualProfile:
     n_info: int                       # info cells among them
     r_word: np.ndarray                # residual over all n_cells
     r_info: np.ndarray                # residual over the n_info data cells
-    detected: Optional[np.ndarray] = None   # detection coverage per m, if any
+    detected: np.ndarray | None = None   # detection coverage per m, if any
 
 
 def binom_pmf(n: int, eps: float, m: int) -> float:
@@ -103,10 +103,10 @@ class NBLDPCScheme:
 
     analytic = False
 
-    def __init__(self, code: LDPCCode, channel: Optional[Channel] = None, *,
+    def __init__(self, code: LDPCCode, channel: Channel | None = None, *,
                  n_iters: int = 12, damping: float = 0.3,
                  llv_scale: float = 4.0, llv_mode: str = "manhattan",
-                 name: Optional[str] = None):
+                 name: str | None = None):
         self.code = code
         self.channel = channel if channel is not None else PlusMinusOne(
             0.0, p_field=code.p)
@@ -234,7 +234,7 @@ def conditional_residual_profile(scheme, *, max_errors: int = 12,
 
 def run_campaign(schemes: Sequence, raw_bers: Sequence[float], *,
                  max_errors=None, trials: int = 128, seed: int = 0,
-                 hamming_trials: int = 2048) -> Dict:
+                 hamming_trials: int = 2048) -> dict:
     """Run every scheme over every raw BER. Returns
     {"rows": [...], "profiles": {name: ResidualProfile}} where each row is
     {scheme, raw_ber, post_ber (info cells), post_ber_word, improvement}.
@@ -245,8 +245,8 @@ def run_campaign(schemes: Sequence, raw_bers: Sequence[float], *,
     cheaper than a decode run.
     """
     eps_max = max(raw_bers)
-    rows: List[dict] = []
-    profiles: Dict[str, ResidualProfile] = {}
+    rows: list[dict] = []
+    profiles: dict[str, ResidualProfile] = {}
     for scheme in schemes:
         if scheme.analytic:
             for eps in raw_bers:
@@ -284,7 +284,7 @@ def run_campaign(schemes: Sequence, raw_bers: Sequence[float], *,
 
 
 def paper_schemes(code: LDPCCode, *, n_iters: int = 12,
-                  damping: float = 0.3) -> List:
+                  damping: float = 0.3) -> list:
     """The paper-style comparison set: NB-LDPC (this work) vs Hamming SECDED
     (memory-mode prior) vs modulo checksum (detect-only prior) vs
     unprotected, all under the ±1 cell-error channel."""
@@ -299,7 +299,7 @@ def paper_schemes(code: LDPCCode, *, n_iters: int = 12,
 
 def select_acceptance_row(rows: Sequence[dict], *, nbldpc_prefix: str =
                           "nbldpc", hamming_name: str = "hamming_secded",
-                          saturation: float = 3.0) -> Optional[dict]:
+                          saturation: float = 3.0) -> dict | None:
     """The paper-style headline point: the largest raw BER at which Hamming
     SECDED has saturated (improvement <= `saturation`, i.e. double-bit
     errors dominate and the code has stopped helping) — report the NB-LDPC

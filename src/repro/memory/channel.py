@@ -28,7 +28,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -198,7 +197,7 @@ class ReadDisturb(Channel):
 
     p_levels: int
     per_read: float
-    disturb_level: Optional[int] = None      # default: top level p-1
+    disturb_level: int | None = None      # default: top level p-1
 
     @property
     def p(self) -> int:
@@ -235,7 +234,7 @@ class StuckAt(Channel):
     def p(self) -> int:
         return self.p_levels
 
-    def mask(self, shape: Tuple[int, ...]) -> jnp.ndarray:
+    def mask(self, shape: tuple[int, ...]) -> jnp.ndarray:
         return jax.random.bernoulli(jax.random.PRNGKey(self.seed),
                                     self.fraction, shape)
 
@@ -255,7 +254,7 @@ class Compose(Channel):
     then stuck cells). Sub-keys are folded per stage, so the composite is as
     deterministic as its parts."""
 
-    channels: Tuple[Channel, ...]
+    channels: tuple[Channel, ...]
 
     def __init__(self, *channels: Channel):
         if not channels:

@@ -49,7 +49,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, Iterable, Iterator, Optional, Tuple
+from collections.abc import Iterable, Iterator
 
 import jax
 import jax.numpy as jnp
@@ -106,12 +106,12 @@ class ControllerStats:
                     getattr(self, f.name) + getattr(other, f.name))
         return self
 
-    def correction_counts(self) -> Dict[str, int]:
+    def correction_counts(self) -> dict[str, int]:
         """The read-path correction triple every per-tenant report uses."""
         return {k: getattr(self, k) for k in self.CORRECTION_KEYS}
 
     @staticmethod
-    def add_counts(out: Dict[str, int], src) -> Dict[str, int]:
+    def add_counts(out: dict[str, int], src) -> dict[str, int]:
         """Add one correction-count source (a `ControllerStats` or any dict
         holding the triple) into `out` in place. The single merge helper
         behind every detected/corrected/uncorrectable summation in the
@@ -140,9 +140,9 @@ class MemoryController:
 
     def __init__(self, *, n_iters: int = 10, damping: float = 0.3,
                  llv_scale: float = 4.0, llv_mode: str = "manhattan",
-                 chunk_size: int = 256, use_sharded: Optional[bool] = None,
+                 chunk_size: int = 256, use_sharded: bool | None = None,
                  scan_block: int = 512,
-                 page_words: Optional[int] = None, policy=None):
+                 page_words: int | None = None, policy=None):
         # `policy=` pins a KernelPolicy for this controller's scans; the
         # class-level `policy` name ("basic"/"writeback"/"scrub") stays the
         # policy *name*, so scrub reports label themselves correctly
@@ -160,9 +160,9 @@ class MemoryController:
         self.scan_block = scan_block
         self.page_words = page_words          # default paging for sweeps
         self.stats = ControllerStats()
-        self._jit_cache: Dict[int, Tuple[LDPCCode, object]] = {}
-        self._scan_cache: Dict[int, Tuple[LDPCCode, object]] = {}
-        self._host_ht_cache: Dict[int, Tuple[LDPCCode, np.ndarray]] = {}
+        self._jit_cache: dict[int, tuple[LDPCCode, object]] = {}
+        self._scan_cache: dict[int, tuple[LDPCCode, object]] = {}
+        self._host_ht_cache: dict[int, tuple[LDPCCode, np.ndarray]] = {}
 
     # -- decode plumbing ----------------------------------------------------
 
@@ -376,7 +376,7 @@ class MemoryController:
 
     @staticmethod
     def iter_pages(store: dict,
-                   page_words: Optional[int] = None) -> Iterator[np.ndarray]:
+                   page_words: int | None = None) -> Iterator[np.ndarray]:
         """Yield writable (b, n) row views over the stored words —
         `page_words` rows per page (ragged tails allowed), or one page per
         tensor when None. Repairs written into a page propagate to backing
@@ -396,7 +396,7 @@ class MemoryController:
         return gen()
 
     def scrub(self, code: LDPCCode, store: dict, *,
-              page_words: Optional[int] = None) -> dict:
+              page_words: int | None = None) -> dict:
         """Full-array sweep: scan every stored word, repair flagged words in
         place (every policy may be scrubbed explicitly; only
         `ScrubController` does it automatically). `page_words` (default: the
@@ -409,7 +409,7 @@ class MemoryController:
                                 page_words=page_words)
 
     def scrub_pages(self, code: LDPCCode, pages: Iterable[np.ndarray], *,
-                    page_words: Optional[int] = None) -> dict:
+                    page_words: int | None = None) -> dict:
         """Paged sweep over any iterator of writable (b, n) level-word
         pages: scan each page (host BLAS or the fused device kernel, per
         the resolved kernel policy), batch-decode only the flagged words, and write

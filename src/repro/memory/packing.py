@@ -16,7 +16,6 @@ device.
 from __future__ import annotations
 
 import math
-from typing import Union
 
 import jax.numpy as jnp
 import numpy as np
@@ -30,7 +29,7 @@ def digits_per_byte(p: int) -> int:
     return math.ceil(8.0 / math.log2(p))
 
 
-def symbolize_bytes(raw: Union[bytes, np.ndarray], p: int) -> np.ndarray:
+def symbolize_bytes(raw: bytes | np.ndarray, p: int) -> np.ndarray:
     """bytes -> flat array of base-p digits (little-endian per byte)."""
     b = np.frombuffer(raw, np.uint8).astype(np.int64) \
         if not isinstance(raw, np.ndarray) else raw.astype(np.int64)

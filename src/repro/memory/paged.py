@@ -31,7 +31,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Iterator, Tuple, Union
+from collections.abc import Iterator
 
 import jax
 import jax.numpy as jnp
@@ -74,7 +74,7 @@ def words_for_tensor(shape, p: int, k: int) -> int:
 
 
 def quantize_tensor(x: jnp.ndarray, p: int, k: int
-                    ) -> Tuple[jnp.ndarray, QuantizedTensor]:
+                    ) -> tuple[jnp.ndarray, QuantizedTensor]:
     """absmax-int8 quantize + symbolize + pack: float tensor -> ((m, k) info
     words in [0, p), QuantizedTensor meta). Pure jnp (a handful of
     elementwise dispatches — the encode/decode executables dominate the
@@ -118,12 +118,22 @@ class PagedProtectedStore:
     """Fixed-shape (page_words, n) GF-level pages as jax arrays, with device
     encode, per-page syndrome flagging, and pipelined corrected reads."""
 
-    def __init__(self, code: Union[str, LDPCCode] = "wl1024_r08", *,
+    def __init__(self, code: str | LDPCCode = "wl1024_r08", *,
                  page_words: int = 256, mesh=None, n_iters: int = 10,
                  damping: float = 0.3, llv_scale: float = 4.0,
                  llv_mode: str = "manhattan", key: int = 0,
                  policy=None):
         self.code = get_code(code) if isinstance(code, str) else code
+        # The device encode/scan executables accumulate int32: every
+        # dot-product term is a product of two symbols in [0, p), so the
+        # per-word sum is bounded by n*(p-1)^2 and must stay below 2^31.
+        # Codes past that belong on MemoryController's exact int64 host
+        # path — reject them here rather than wrap silently in the kernel.
+        if self.code.n * (self.code.p - 1) ** 2 >= 2 ** 31:
+            raise ValueError(
+                f"code n={self.code.n} p={self.code.p} exceeds the int32 "
+                "kernel accumulator bound n*(p-1)^2 < 2^31; use "
+                "MemoryController's exact host scan for this code")
         # Backend selection is one KernelPolicy (repro.kernels.backend):
         # None defers to the ambient policy at executable-build time —
         # "auto" compiles the Pallas kernels natively on TPU and routes to
@@ -290,7 +300,7 @@ class PagedProtectedStore:
                 [u, jnp.zeros((self.page_words - b, u.shape[1]), u.dtype)])
         return self._encoder()(u.astype(jnp.int32))[:b]
 
-    def append_words(self, u) -> Tuple[int, int]:
+    def append_words(self, u) -> tuple[int, int]:
         """Append (m, k) info words (field symbols in [0, p)): encode on
         device and pack into pages. Returns the occupied word range
         [start, start + m). A partially-filled trailing page is padded with
@@ -319,7 +329,7 @@ class PagedProtectedStore:
         self.stats.words_written += m
         return start, start + m
 
-    def append_encoded(self, enc) -> Tuple[int, int]:
+    def append_encoded(self, enc) -> tuple[int, int]:
         """Adopt already-encoded (m, n) codewords (e.g. host-encoded
         checkpoint pages from `ProtectedMemoryArray.stored`) without
         re-encoding — the backend-interop path."""
@@ -356,7 +366,7 @@ class PagedProtectedStore:
     # -- fault injection ----------------------------------------------------
 
     def inject(self, channel: Channel,
-               key: Union[int, jax.Array, None] = None, *, t: float = 0.0,
+               key: int | jax.Array | None = None, *, t: float = 0.0,
                n_reads: int = 0) -> int:
         """Corrupt the stored pages in place through a level-domain channel
         model (device-side). Returns the number of cells changed. Pad rows

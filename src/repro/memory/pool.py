@@ -29,7 +29,7 @@ anyway gets a clean error, never a corrupted block table.
 """
 from __future__ import annotations
 
-from typing import Dict, Iterator, List, Optional, Union
+from collections.abc import Iterator
 
 import jax
 import jax.numpy as jnp
@@ -55,7 +55,7 @@ class ProtectedPagePool:
     """Fixed-capacity pool of (page_words, n) GF pages with a free list,
     ref counts, owner labels, and incremental cold-page scrubbing."""
 
-    def __init__(self, code: Union[str, LDPCCode] = "wl1024_r08", *,
+    def __init__(self, code: str | LDPCCode = "wl1024_r08", *,
                  page_words: int = 256, capacity_pages: int = 64,
                  mesh=None, n_iters: int = 10, damping: float = 0.3,
                  llv_scale: float = 4.0, llv_mode: str = "manhattan",
@@ -74,9 +74,9 @@ class ProtectedPagePool:
         self.mesh = mesh
         self.policy = self._template.policy
         self.capacity_pages = capacity_pages
-        self._storage: List[Optional[jnp.ndarray]] = [None] * capacity_pages
+        self._storage: list[jnp.ndarray | None] = [None] * capacity_pages
         self._refcount = [0] * capacity_pages
-        self._owner: List[Optional[object]] = [None] * capacity_pages
+        self._owner: list[object | None] = [None] * capacity_pages
         self._stamp = [0] * capacity_pages     # last touch (engine step)
         self._free = list(range(capacity_pages - 1, -1, -1))  # pop() -> 0,1,…
         self._scrub_cursor = 0
@@ -87,7 +87,7 @@ class ProtectedPagePool:
         self._scanned = [False] * capacity_pages
         self.flag_alpha = 0.3
         self.stats = ControllerStats()         # pool-level scrub aggregates
-        self.scrub_by_owner: Dict[object, dict] = {}
+        self.scrub_by_owner: dict[object, dict] = {}
 
     # -- introspection ------------------------------------------------------
 
@@ -169,7 +169,7 @@ class ProtectedPagePool:
         (0.0 until the first scan)."""
         return self._flag_ewma[pid]
 
-    def hot_pages(self, top: Optional[int] = None) -> List[int]:
+    def hot_pages(self, top: int | None = None) -> list[int]:
         """Allocated pages ranked for scrubbing: never-scanned pages first
         (coverage), then by descending flag EWMA (repair pressure)."""
         allocated = [pid for pid in range(self.capacity_pages)
@@ -179,7 +179,7 @@ class ProtectedPagePool:
                                          -self._flag_ewma[pid], pid))
         return ranked[:top] if top is not None else ranked
 
-    def scrub(self, *, max_pages: Optional[int] = None, now: int = 0,
+    def scrub(self, *, max_pages: int | None = None, now: int = 0,
               min_age: int = 0, prioritize: bool = False) -> dict:
         """Incrementally sweep allocated pages: scan, decode flagged pages,
         write repairs back, attributing repairs to each page's owner.
@@ -212,7 +212,7 @@ class ProtectedPagePool:
             order = allocated[start:] + allocated[:start]
         est = obs_ras.current()
         swept = flagged_words = repaired = 0
-        by_owner: Dict[object, dict] = {}
+        by_owner: dict[object, dict] = {}
         for pid in order:
             if swept >= budget:
                 break
@@ -280,7 +280,7 @@ class ProtectedPagePool:
 
     # -- fault injection over the whole pool --------------------------------
 
-    def inject(self, channel, key: Union[int, jax.Array], *, t: float = 0.0,
+    def inject(self, channel, key: int | jax.Array, *, t: float = 0.0,
                n_reads: int = 0, owners=None) -> int:
         """Corrupt allocated pool pages in place through a level-domain
         channel (optionally only pages owned by `owners`). Returns cells
@@ -329,7 +329,7 @@ class PooledStore(PagedProtectedStore):
                          policy=pool.policy)
         self.pool = pool
         self.owner = owner
-        self.block_table: List[int] = []
+        self.block_table: list[int] = []
         self._pages = _BlockTableView(self)   # keep `_pages`-style debugging
                                               # (tests poke st._pages[i])
 

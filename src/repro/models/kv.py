@@ -30,7 +30,7 @@ it.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -126,10 +126,10 @@ class ProtectedKVLayer(KVSource):
         self.hot_len = 0
         self.n_frozen = 0              # frozen tokens (== pages * page_tokens)
         self._metas: list = []         # per frozen page: (k_meta, v_meta)
-        self._decoded: Optional[list] = None   # memoized [(k_pg, v_pg)]
+        self._decoded: list | None = None   # memoized [(k_pg, v_pg)]
         # fused-path memo: corrected GF codeword pages [(k_words, v_words)]
         # (what attend_protected consumes — symbols, not dequantized K/V)
-        self._gf_pages: Optional[list] = None
+        self._gf_pages: list | None = None
         self._gf_stack = None          # stacked (NP,1,W,n)/(NP,1) arrays
 
     # -- write path ---------------------------------------------------------
@@ -209,8 +209,9 @@ class ProtectedKVLayer(KVSource):
         changed = self.k_store.inject(channel, kk, **kw)
         changed += self.v_store.inject(channel, vk, **kw)
         self.invalidate()
-        obs_trace.current().instant("kv.inject", owner=str(self.owner),
-                                    cells=changed)
+        tr = obs_trace.current()
+        if tr.enabled:
+            tr.instant("kv.inject", owner=str(self.owner), cells=changed)
         reg = obs_metrics.current()
         if reg.enabled:
             reg.counter("kv_cells_injected", layer="kv",
@@ -246,10 +247,10 @@ class ProtectedKVLayer(KVSource):
         kcode = self.k_store.code.k
         if not self.pkv.corrected:
             pages = zip(self.k_store._iter_pages(),
-                        self.v_store._iter_pages())
+                        self.v_store._iter_pages(), strict=True)
         elif self.pkv.overlap:
             pages = zip(self.k_store.iter_corrected(depth=1),
-                        self.v_store.iter_corrected(depth=1))
+                        self.v_store.iter_corrected(depth=1), strict=True)
         else:
             def sync_pages():
                 for i in range(self.k_store.n_pages):
@@ -258,7 +259,8 @@ class ProtectedKVLayer(KVSource):
                     yield (jax.block_until_ready(kp.symbols),
                            jax.block_until_ready(vp.symbols))
             pages = sync_pages()
-        for (kpg, vpg), (kmeta, vmeta) in zip(pages, self._metas):
+        for (kpg, vpg), (kmeta, vmeta) in zip(pages, self._metas,
+                                              strict=True):
             kd = dequantize_tensor(kpg[:, :kcode], kmeta, p)
             vd = dequantize_tensor(vpg[:, :kcode], vmeta, p)
             if not self.pkv.overlap:
@@ -375,8 +377,8 @@ class ProtectedKVCaches:
         self.batch, self.max_seq = batch, max_seq
         self.owner = owner
         n_aux = cfg.n_aux_tokens or 1
-        self.layers: Dict[Tuple[int, int], ProtectedKVLayer] = {}
-        self.dense: Dict[Tuple[int, int], dict] = {}
+        self.layers: dict[tuple[int, int], ProtectedKVLayer] = {}
+        self.dense: dict[tuple[int, int], dict] = {}
         for g in range(cfg.n_groups):
             for i, spec in enumerate(cfg.group_spec):
                 if self._protectable(spec):
@@ -401,7 +403,7 @@ class ProtectedKVCaches:
             return self.layers[(g, i)]           # a KVSource
         return self.dense[(g, i)]
 
-    def update(self, g: int, i: int, new_cache: Optional[dict]) -> None:
+    def update(self, g: int, i: int, new_cache: dict | None) -> None:
         if not new_cache or (g, i) in self.layers:
             return
         self.dense[(g, i)].update(new_cache)
@@ -413,10 +415,10 @@ class ProtectedKVCaches:
         prompt K/V of protected layers is appended (quantize + device
         encode, page by page); dense entries are re-homed into their
         max-seq buffers."""
-        for i, spec in enumerate(self.cfg.group_spec):
+        for i in range(len(self.cfg.group_spec)):
             entry = caches[f"pos{i}"]
             for g in range(self.cfg.n_groups):
-                sliced = jax.tree.map(lambda t: t[g], entry)
+                sliced = jax.tree.map(lambda t, g=g: t[g], entry)
                 if (g, i) in self.layers:
                     self.layers[(g, i)].append(sliced["k"][:, :S],
                                                sliced["v"][:, :S])
@@ -428,12 +430,12 @@ class ProtectedKVCaches:
                             dst[name] = val
                         else:
                             pad = [(0, d - s) for d, s in
-                                   zip(buf.shape, val.shape)]
+                                   zip(buf.shape, val.shape, strict=True)]
                             dst[name] = jnp.pad(val, pad)
 
     # -- maintenance / stats ------------------------------------------------
 
-    def inject(self, channel, key: Optional[Any] = None, **kw) -> int:
+    def inject(self, channel, key: Any | None = None, **kw) -> int:
         """Corrupt every protected layer's stores and invalidate their
         decoded views. Each layer draws an independent fold_in-derived
         subkey (and splits it again for K vs V inside the layer), so no two

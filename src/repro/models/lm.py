@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -40,7 +40,7 @@ from repro.nn.layers import CDT
 
 def _init_block(key, spec: LayerSpec, cfg: ArchConfig):
     ks = jax.random.split(key, 8)
-    p: Dict[str, Any] = {"norm1": {"scale": jnp.ones((cfg.d_model,), jnp.float32)}}
+    p: dict[str, Any] = {"norm1": {"scale": jnp.ones((cfg.d_model,), jnp.float32)}}
     if spec.kind == "mamba":
         p["mamba"] = S.init_mamba(ks[0], cfg)
     elif spec.kind == "encdec":
@@ -74,7 +74,7 @@ def _block_axes(spec: LayerSpec, cfg: ArchConfig):
             "wv": ("fsdp", "kv_flat"), "wo": ("heads_flat", "fsdp")}
     mlp = {"w_gate": ("fsdp", "d_ff"), "w_up": ("fsdp", "d_ff"),
            "w_down": ("d_ff", "fsdp")}
-    a: Dict[str, Any] = {"norm1": norm}
+    a: dict[str, Any] = {"norm1": norm}
     if spec.kind == "mamba":
         ma = S.mamba_param_axes()
         ma = {k: tuple("fsdp" if ax == "d_model" else ax for ax in v)
@@ -109,7 +109,7 @@ def _block_axes(spec: LayerSpec, cfg: ArchConfig):
 def init_params(key, cfg: ArchConfig):
     keys = jax.random.split(key, 4 + len(cfg.group_spec))
     s = 0.02
-    params: Dict[str, Any] = {
+    params: dict[str, Any] = {
         "embed": s * jax.random.normal(keys[0], (cfg.vocab_size, cfg.d_model),
                                        jnp.float32),
         "final_norm": {"scale": jnp.ones((cfg.d_model,), jnp.float32)},
@@ -134,7 +134,7 @@ def init_params(key, cfg: ArchConfig):
 
 
 def param_axes(cfg: ArchConfig):
-    axes: Dict[str, Any] = {
+    axes: dict[str, Any] = {
         "embed": ("vocab", "fsdp"),
         "final_norm": {"scale": (None,)},
     }
@@ -183,7 +183,7 @@ def _cross_kv(bp_attn, aux, cfg: ArchConfig):
 def _apply_block(bp, x, spec: LayerSpec, cfg: ArchConfig, *, positions,
                  aux=None, cache=None, cache_pos=None, pim_ctx=None):
     """One block. Returns (x, new_cache)."""
-    new_cache: Dict[str, Any] = {}
+    new_cache: dict[str, Any] = {}
     if spec.kind == "mamba":
         state = None
         decode = cache is not None
@@ -274,7 +274,7 @@ def _iter_groups(cfg: ArchConfig, body, carry, xs, n: int):
     ys = []
     b = _remat(cfg, body) if cfg.remat else body
     for g in range(n):
-        carry, y = b(carry, jax.tree.map(lambda t: t[g], xs))
+        carry, y = b(carry, jax.tree.map(lambda t, g=g: t[g], xs))
         ys.append(y)
     if ys and ys[0] is not None:
         ys = jax.tree.map(lambda *t: jnp.stack(t), *ys)
@@ -365,7 +365,7 @@ def _block_cache(spec: LayerSpec, cfg: ArchConfig, batch: int, max_seq: int,
     if spec.kind == "mamba":
         return {"conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), CDT),
                 "ssm": jnp.zeros((batch, cfg.d_inner, cfg.d_state), jnp.float32)}
-    c: Dict[str, Any] = {}
+    c: dict[str, Any] = {}
     if spec.kind == "encdec" or not spec.cross:
         seq = max_seq
         if spec.local_window:
@@ -447,7 +447,7 @@ def _decode_step_protected(params, cfg: ArchConfig, caches, token, pos, *,
     positions = jnp.broadcast_to(
         jnp.reshape(jnp.asarray(pos, jnp.int32), (-1, 1)), (B, 1))
     for g in range(cfg.n_groups):
-        gp = jax.tree.map(lambda t: t[g], params["groups"])
+        gp = jax.tree.map(lambda t, g=g: t[g], params["groups"])
         for i, spec in enumerate(cfg.group_spec):
             x, nc = _apply_block(gp[f"pos{i}"], x, spec, cfg,
                                  positions=positions, aux=aux,
@@ -497,7 +497,7 @@ def decode_step(params, cfg: ArchConfig, caches, token, pos, *, aux=None,
 
 
 def prefill(params, cfg: ArchConfig, tokens, *, aux=None, pim_ctx=None,
-            protected_kv=None, max_seq: Optional[int] = None):
+            protected_kv=None, max_seq: int | None = None):
     """Run the full prompt, building decode caches. Returns (logits, caches).
 
     The sequence axis is processed in full (scored prompt); caches are filled
@@ -527,7 +527,7 @@ def prefill(params, cfg: ArchConfig, tokens, *, aux=None, pim_ctx=None,
     def body(x, gp):
         caches = {}
         for i, spec in enumerate(cfg.group_spec):
-            cache_entry: Dict[str, Any] = {}
+            cache_entry: dict[str, Any] = {}
             if spec.kind == "mamba":
                 h = L.rmsnorm(gp[f"pos{i}"]["norm1"], x, cfg.norm_eps)
                 y, st = S.mamba_apply(gp[f"pos{i}"]["mamba"], h, cfg)

@@ -10,7 +10,6 @@ from __future__ import annotations
 import dataclasses
 import functools
 import warnings
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

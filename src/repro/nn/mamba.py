@@ -13,7 +13,7 @@ architectures.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -128,7 +128,7 @@ def _ssm_step(u, delta, A, Bm, Cm, D, h):
     return y, h
 
 
-def mamba_apply(params, x, cfg: ArchConfig, state: Optional[MambaState] = None,
+def mamba_apply(params, x, cfg: ArchConfig, state: MambaState | None = None,
                 *, decode: bool = False):
     """x: (B, L, d_model) -> (y, new_state).
 

@@ -22,7 +22,6 @@ transposes), so the same path serves training and inference.
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

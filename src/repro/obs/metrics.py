@@ -32,7 +32,7 @@ import json
 import threading
 import time
 import warnings
-from typing import Dict, Iterable, List, Optional, Tuple
+from collections.abc import Iterable
 
 __all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry",
            "NULL_REGISTRY", "current", "use_metrics", "instrument_count"]
@@ -57,10 +57,10 @@ def _bump():
     _n_instruments += 1
 
 
-LabelKey = Tuple[Tuple[str, str], ...]
+LabelKey = tuple[tuple[str, str], ...]
 
 
-def _label_key(labels: Dict[str, str]) -> LabelKey:
+def _label_key(labels: dict[str, str]) -> LabelKey:
     return tuple(sorted((str(k), str(v)) for k, v in labels.items()))
 
 
@@ -193,14 +193,14 @@ class MetricsRegistry:
         self.max_series = max_series
         # name -> {label_key -> instrument}; kinds tracked per name so a
         # counter name can't silently come back as a gauge
-        self._series: Dict[str, Dict[LabelKey, object]] = {}
-        self._kinds: Dict[str, str] = {}
+        self._series: dict[str, dict[LabelKey, object]] = {}
+        self._kinds: dict[str, str] = {}
         self._overflowed: set = set()
         self._lock = threading.Lock()
 
     # -- instrument factories ------------------------------------------------
 
-    def _get(self, kind: str, name: str, labels: Dict[str, str], make):
+    def _get(self, kind: str, name: str, labels: dict[str, str], make):
         key = _label_key(labels)
         with self._lock:
             series = self._series.setdefault(name, {})
@@ -247,7 +247,7 @@ class MetricsRegistry:
         out: dict = {}
         with self._lock:
             for name, series in sorted(self._series.items()):
-                rows: List[dict] = []
+                rows: list[dict] = []
                 for key in sorted(series):
                     row = {"labels": dict(key)}
                     row.update(series[key].export())
@@ -255,7 +255,7 @@ class MetricsRegistry:
                 out[name] = {"kind": self._kinds[name], "series": rows}
         return out
 
-    def append_jsonl(self, path: str, *, meta: Optional[dict] = None) -> None:
+    def append_jsonl(self, path: str, *, meta: dict | None = None) -> None:
         """Append one snapshot line: {"ts": ..., "metrics": {...}, **meta}."""
         rec = {"ts": time.time(), "metrics": self.snapshot()}
         if meta:
@@ -267,7 +267,7 @@ class MetricsRegistry:
         """Prometheus text exposition format (counters get a `_total`
         suffix; histograms expand to `_bucket{le=...}` / `_sum` /
         `_count`)."""
-        lines: List[str] = []
+        lines: list[str] = []
         snap = self.snapshot()
         for name, ent in snap.items():
             kind = ent["kind"]
@@ -291,7 +291,7 @@ class MetricsRegistry:
         return "\n".join(lines) + "\n"
 
     @staticmethod
-    def value(snapshot: dict, name: str, **labels) -> Optional[float]:
+    def value(snapshot: dict, name: str, **labels) -> float | None:
         """Pull one series' value out of a `snapshot()` dict (test/bench
         convenience; None when the series doesn't exist)."""
         ent = snapshot.get(name)
@@ -304,7 +304,7 @@ class MetricsRegistry:
         return None
 
 
-def _prom_labels(labels: Dict[str, str]) -> str:
+def _prom_labels(labels: dict[str, str]) -> str:
     if not labels:
         return ""
     inner = ",".join(f'{k}="{v}"' for k, v in sorted(labels.items()))
@@ -326,7 +326,7 @@ def current():
 
 
 @contextlib.contextmanager
-def use_metrics(registry: Optional[MetricsRegistry] = None):
+def use_metrics(registry: MetricsRegistry | None = None):
     """Install `registry` as the ambient metrics sink for the block (a
     fresh `MetricsRegistry` when called with None). Yields the registry."""
     global _current

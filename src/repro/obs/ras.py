@@ -44,7 +44,6 @@ from __future__ import annotations
 
 import contextlib
 import math
-from typing import Dict, List, Optional, Tuple
 
 __all__ = ["ErrorRateEstimator", "RegionEstimate", "NULL_ESTIMATOR",
            "current", "use_estimator"]
@@ -57,16 +56,16 @@ class RegionEstimate:
                  "words_flagged", "decode_words", "decode_fails", "_n_symbols")
 
     def __init__(self):
-        self.flag_rate: Optional[float] = None      # EWMA word flag rate
-        self.stress: Optional[float] = None         # EWMA iterations / cap
-        self.fail_rate: Optional[float] = None      # EWMA detect_fail rate
+        self.flag_rate: float | None = None      # EWMA word flag rate
+        self.stress: float | None = None         # EWMA iterations / cap
+        self.fail_rate: float | None = None      # EWMA detect_fail rate
         self.words_seen = 0
         self.words_flagged = 0
         self.decode_words = 0
         self.decode_fails = 0
-        self._n_symbols: Optional[int] = None
+        self._n_symbols: int | None = None
 
-    def _fold(self, prev: Optional[float], obs: float, alpha: float,
+    def _fold(self, prev: float | None, obs: float, alpha: float,
               k: int) -> float:
         if prev is None:
             return obs
@@ -75,7 +74,7 @@ class RegionEstimate:
 
     # -- derived quantities --------------------------------------------------
 
-    def raw_ber(self) -> Optional[float]:
+    def raw_ber(self) -> float | None:
         """Per-symbol raw BER inverted from the word flag rate: a word is
         flagged iff >=1 of its n symbols flipped, so for an i.i.d. channel
         ber = 1 - (1 - f)^(1/n)."""
@@ -84,7 +83,7 @@ class RegionEstimate:
         f = min(max(self.flag_rate, 0.0), 1.0 - 1e-12)
         return 1.0 - (1.0 - f) ** (1.0 / self._n_symbols)
 
-    def residual_ber_proxy(self) -> Optional[float]:
+    def residual_ber_proxy(self) -> float | None:
         """Upper-bound proxy for post-correction data BER: only
         detect_fail words can leak symbol errors, and at the operating
         point a failed word carries at most ~its raw symbol error
@@ -112,7 +111,7 @@ class _NullEstimator:
     enabled = False
 
     def observe_scan(self, flagged: int, total: int, *,
-                     n_symbols: Optional[int] = None,
+                     n_symbols: int | None = None,
                      region: str = "") -> None:
         pass
 
@@ -153,7 +152,7 @@ class ErrorRateEstimator:
         self.stress_threshold = stress_threshold
         self.min_scale = min_scale
         self.max_scale = max_scale
-        self._regions: Dict[str, RegionEstimate] = {}
+        self._regions: dict[str, RegionEstimate] = {}
 
     def region(self, region: str = "") -> RegionEstimate:
         est = self._regions.get(region)
@@ -164,7 +163,7 @@ class ErrorRateEstimator:
     # -- observation feeds ---------------------------------------------------
 
     def observe_scan(self, flagged: int, total: int, *,
-                     n_symbols: Optional[int] = None,
+                     n_symbols: int | None = None,
                      region: str = "") -> None:
         """Feed one syndrome-scan outcome: `flagged` of `total` codewords
         were dirty. `n_symbols` (codeword length n) enables raw-BER
@@ -228,8 +227,8 @@ class ErrorRateEstimator:
         scale = min(max(scale, self.min_scale), self.max_scale)
         return max(1, int(round(nominal * scale)))
 
-    def hot_regions(self, top: Optional[int] = None
-                    ) -> List[Tuple[str, float]]:
+    def hot_regions(self, top: int | None = None
+                    ) -> list[tuple[str, float]]:
         """Regions ranked by scrub pressure, hottest first."""
         ranked = sorted(((r, self.pressure(r)) for r in self._regions),
                         key=lambda kv: (-kv[1], kv[0]))
@@ -260,7 +259,7 @@ class ErrorRateEstimator:
                                region=region).set(res)
 
 
-def _as_float_list(x) -> List[float]:
+def _as_float_list(x) -> list[float]:
     """Coerce scalar / sequence / numpy array to a flat float list without
     importing numpy (works on anything iterable of numbers)."""
     if x is None:
@@ -271,7 +270,7 @@ def _as_float_list(x) -> List[float]:
     if isinstance(x, (int, float, bool)):
         return [float(x)]
     try:
-        out: List[float] = []
+        out: list[float] = []
         for v in x:
             if isinstance(v, (list, tuple)):
                 out.extend(float(u) for u in v)
@@ -309,7 +308,7 @@ def current():
 
 
 @contextlib.contextmanager
-def use_estimator(estimator: Optional[ErrorRateEstimator] = None):
+def use_estimator(estimator: ErrorRateEstimator | None = None):
     """Install `estimator` as the ambient RAS sink for the block (a fresh
     `ErrorRateEstimator` when called with None). Yields the estimator."""
     global _current

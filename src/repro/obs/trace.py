@@ -37,7 +37,6 @@ import contextlib
 import json
 import threading
 import time
-from typing import List, Optional
 
 __all__ = ["Tracer", "NULL_TRACER", "current", "use_tracer", "span"]
 
@@ -122,7 +121,7 @@ class Tracer:
         self.pid = pid
         self.max_events = max_events
         self.jax_profiler = jax_profiler
-        self._events: List[dict] = []
+        self._events: list[dict] = []
         self._dropped = 0
         self._epoch_ns = time.perf_counter_ns()
         self._tls = threading.local()
@@ -183,16 +182,16 @@ class Tracer:
 
     # -- export --------------------------------------------------------------
 
-    def events(self) -> List[dict]:
+    def events(self) -> list[dict]:
         with self._lock:
             return list(self._events)
 
-    def spans(self, name: Optional[str] = None) -> List[dict]:
+    def spans(self, name: str | None = None) -> list[dict]:
         """Complete ("X") events, optionally filtered by name."""
         return [e for e in self.events()
                 if e["ph"] == "X" and (name is None or e["name"] == name)]
 
-    def to_chrome_trace(self, path: Optional[str] = None) -> dict:
+    def to_chrome_trace(self, path: str | None = None) -> dict:
         """The Chrome trace-event JSON object; written to `path` when
         given. Load with chrome://tracing or ui.perfetto.dev."""
         doc = {"traceEvents": self.events(), "displayTimeUnit": "ms",
@@ -215,7 +214,7 @@ def current():
 
 
 @contextlib.contextmanager
-def use_tracer(tracer: Optional[Tracer] = None):
+def use_tracer(tracer: Tracer | None = None):
     """Install `tracer` as the ambient span sink for the block (a fresh
     `Tracer` when called with None). Yields the tracer."""
     global _current

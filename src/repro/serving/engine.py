@@ -52,7 +52,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import deque
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -119,14 +119,14 @@ class BatchedPagedKV(KVSource):
         self.hot_k = jnp.zeros((max_active, self.T, hkv, dh), dtype)
         self.hot_v = jnp.zeros((max_active, self.T, hkv, dh), dtype)
         self.hot_len = np.zeros(max_active, np.int32)
-        self.k_stores: List[Optional[PooledStore]] = [None] * max_active
-        self.v_stores: List[Optional[PooledStore]] = [None] * max_active
-        self.metas: List[list] = [[] for _ in range(max_active)]
-        self._decoded: List[list] = [[] for _ in range(max_active)]
-        self._stack_cache: Optional[list] = None
+        self.k_stores: list[PooledStore | None] = [None] * max_active
+        self.v_stores: list[PooledStore | None] = [None] * max_active
+        self.metas: list[list] = [[] for _ in range(max_active)]
+        self._decoded: list[list] = [[] for _ in range(max_active)]
+        self._stack_cache: list | None = None
         # fused-path memos: per-slot corrected GF codeword pages and the
         # stacked (NP, B, W, n) kernel operands built from them
-        self._gf_decoded: List[list] = [[] for _ in range(max_active)]
+        self._gf_decoded: list[list] = [[] for _ in range(max_active)]
         self._gf_stack_cache = None
         # which slots advance on append; the engine sets this each step
         self.active = np.zeros(max_active, bool)
@@ -148,7 +148,7 @@ class BatchedPagedKV(KVSource):
     def close_slot(self, b: int) -> dict:
         """Free the slot's pool blocks. Returns the slot's accumulated
         correction counters so the engine can bank them per tenant."""
-        out: Dict[str, int] = {}
+        out: dict[str, int] = {}
         for store in (self.k_stores[b], self.v_stores[b]):
             if store is not None:
                 ControllerStats.add_counts(out, store.stats)
@@ -235,7 +235,7 @@ class BatchedPagedKV(KVSource):
         self._stack_cache = None
         self._gf_stack_cache = None
 
-    def _decoded_page(self, b: int, j: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    def _decoded_page(self, b: int, j: int) -> tuple[jnp.ndarray, jnp.ndarray]:
         ent = self._decoded[b][j]
         if ent is None:
             kmeta, vmeta = self.metas[b][j]
@@ -281,7 +281,7 @@ class BatchedPagedKV(KVSource):
 
     # -- fused read path ----------------------------------------------------
 
-    def _gf_page(self, b: int, j: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    def _gf_page(self, b: int, j: int) -> tuple[jnp.ndarray, jnp.ndarray]:
         """Slot b's corrected GF codeword page j (scan-gated decode through
         the slot's stores, corrections attributed to the owning tenant)."""
         ent = self._gf_decoded[b][j]
@@ -366,8 +366,8 @@ class BatchedPagedKV(KVSource):
         about = active & (self.hot_len == self.T - 1)
         return 2 * int(about.sum())
 
-    def slot_pages(self, b: int) -> List[int]:
-        out: List[int] = []
+    def slot_pages(self, b: int) -> list[int]:
+        out: list[int] = []
         for store in (self.k_stores[b], self.v_stores[b]):
             if store is not None:
                 out.extend(store.block_table)
@@ -422,7 +422,7 @@ class BatchedDenseKV(KVSource):
     def freeze_candidates(self, active: np.ndarray) -> int:
         return 0
 
-    def slot_pages(self, b: int) -> List[int]:
+    def slot_pages(self, b: int) -> list[int]:
         return []
 
 
@@ -434,7 +434,7 @@ class EngineCaches:
     is_protected_manager = True
 
     def __init__(self, cfg: ArchConfig,
-                 layers: Dict[Tuple[int, int], Any]):
+                 layers: dict[tuple[int, int], Any]):
         self.cfg = cfg
         self.layers = layers
 
@@ -456,13 +456,13 @@ class SequenceState:
     tenant: Any
     prompt: np.ndarray                  # (S,) int token ids
     max_new: int
-    generated: List[int] = dataclasses.field(default_factory=list)
+    generated: list[int] = dataclasses.field(default_factory=list)
     status: str = "waiting"             # waiting | active | done
-    slot: Optional[int] = None
+    slot: int | None = None
     replay_idx: int = 0                 # next generated token to feed
     admit_step: int = -1
     preemptions: int = 0
-    stats: Dict[str, int] = dataclasses.field(
+    stats: dict[str, int] = dataclasses.field(
         default_factory=lambda: dict.fromkeys(
             ControllerStats.CORRECTION_KEYS, 0))
 
@@ -484,8 +484,8 @@ class ServingEngine:
     forced, which is bit-exact with never having been evicted."""
 
     def __init__(self, params, cfg: ArchConfig, *,
-                 pkv: Optional[ProtectedKVConfig] = None,
-                 pool: Optional[ProtectedPagePool] = None,
+                 pkv: ProtectedKVConfig | None = None,
+                 pool: ProtectedPagePool | None = None,
                  max_active: int = 16, max_seq: int = 512,
                  protected: bool = True, scrub_every: int = 0,
                  scrub_max_pages: int = 4, scrub_min_age: int = 0):
@@ -503,7 +503,7 @@ class ServingEngine:
                     "ServingEngine serves global self-attention stacks; "
                     f"layer kind {spec.kind!r} (cross={spec.cross}, "
                     f"window={spec.local_window}) is not batchable here")
-        layers: Dict[Tuple[int, int], Any] = {}
+        layers: dict[tuple[int, int], Any] = {}
         if protected:
             self.pkv = pkv or ProtectedKVConfig()
             wpu = words_for_tensor((1, self.pkv.page_tokens, hkv, dh),
@@ -529,10 +529,10 @@ class ServingEngine:
         self.caches = EngineCaches(cfg, layers)
         self.n_stores = 2 * len(layers)      # pool pages per frozen KV page
         self.waiting: deque = deque()
-        self.slots: List[Optional[SequenceState]] = [None] * max_active
-        self.sequences: List[SequenceState] = []
+        self.slots: list[SequenceState | None] = [None] * max_active
+        self.sequences: list[SequenceState] = []
         self._step_no = 0
-        self.scrub_reports: List[dict] = []
+        self.scrub_reports: list[dict] = []
 
     def _default_capacity(self, cfg: ArchConfig, max_active: int) -> int:
         pages_per_seq = -(-self.max_seq // self.pkv.page_tokens)
@@ -558,8 +558,8 @@ class ServingEngine:
             return 0
         return (len(seq.prompt) // self.pkv.page_tokens) * self.n_stores
 
-    def _admit(self) -> List[SequenceState]:
-        assigns: List[Tuple[SequenceState, int]] = []
+    def _admit(self) -> list[SequenceState]:
+        assigns: list[tuple[SequenceState, int]] = []
         reserved: set = set()
         pending_pages = 0
         while self.waiting:
@@ -580,7 +580,7 @@ class ServingEngine:
         # rows are computation-independent, so a prompt's row is bit-exact
         # whether it shares the batch with 15 other admits or 15 pad rows —
         # and admitting a full engine costs one forward pass, not max_active
-        by_len: Dict[int, List[Tuple[SequenceState, int]]] = {}
+        by_len: dict[int, list[tuple[SequenceState, int]]] = {}
         for seq, b in assigns:
             by_len.setdefault(len(seq.prompt), []).append((seq, b))
         for S, group in sorted(by_len.items()):
@@ -588,7 +588,7 @@ class ServingEngine:
         return [seq for seq, _ in assigns]
 
     def _prefill_group(self, S: int,
-                       group: List[Tuple[SequenceState, int]]) -> None:
+                       group: list[tuple[SequenceState, int]]) -> None:
         from repro.models import lm
         tokens = np.zeros((self.max_active, S), np.int64)
         for j, (seq, _b) in enumerate(group):
@@ -625,7 +625,7 @@ class ServingEngine:
         self.slots[seq.slot] = None
         seq.slot = None
 
-    def _preempt_one(self) -> Optional[int]:
+    def _preempt_one(self) -> int | None:
         """Evict the youngest active sequence (LIFO, vLLM-style): cheapest
         to replay, and the oldest tenants keep streaming. Returns the freed
         slot index."""
@@ -714,8 +714,9 @@ class ServingEngine:
         report["preempted"] = sum(s.preemptions
                                   for s in self.sequences) - pre
         if report["preempted"]:
-            obs_trace.current().instant("engine.preempt",
-                                        count=report["preempted"])
+            tr = obs_trace.current()
+            if tr.enabled:
+                tr.instant("engine.preempt", count=report["preempted"])
         if not active_mask.any():
             self._step_no += 1
             return report
@@ -784,7 +785,7 @@ class ServingEngine:
         for layer in self.caches.layers.values():
             layer.invalidate()
 
-    def run(self, max_steps: int = 100000) -> Dict[Any, List[int]]:
+    def run(self, max_steps: int = 100000) -> dict[Any, list[int]]:
         """Step until every submitted sequence finishes. Returns
         {tenant: generated tokens}."""
         steps = 0
@@ -816,7 +817,7 @@ class ServingEngine:
             if stores is not None and stores[b] is not None:
                 yield stores[b]
 
-    def tenant_stats(self, tenant) -> Dict[str, int]:
+    def tenant_stats(self, tenant) -> dict[str, int]:
         """Aggregated correction accounting for one tenant: banked counters
         from retired/preempted slots, live slot stores, and the pool's
         per-owner scrub attribution."""

@@ -74,7 +74,7 @@ except ImportError:  # deterministic fallback sampler
                 grids = [s.sample(rng, _FALLBACK_EXAMPLES) for s in strategies]
                 for values in itertools.product(*grids):
                     call_kwargs = dict(kwargs)
-                    call_kwargs.update(zip(names, values))
+                    call_kwargs.update(zip(names, values, strict=True))
                     fn(*args, **call_kwargs)
 
             wrapper.__name__ = fn.__name__

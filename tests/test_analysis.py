@@ -1,0 +1,404 @@
+"""repro.analysis static pass: one positive + one negative + one noqa
+fixture per RPL rule, engine/noqa semantics, CLI exit codes, and the
+"repo is clean at head" regression."""
+import json
+import os
+import pathlib
+
+import pytest
+
+from repro.analysis import RULES, run_file, run_paths
+from repro.analysis.__main__ import main
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+# --------------------------------------------------------------------------
+# fixtures: (relative path, source, 1-indexed line of the one violation)
+# --------------------------------------------------------------------------
+
+FIXTURES = {
+    "RPL001": dict(
+        path="fixture_rpl001.py",
+        pos="""\
+from jax.experimental import pallas as pl
+
+
+def fwd(x, kernel):
+    return pl.pallas_call(kernel, interpret=True)(x)
+""",
+        line=5,
+        neg="""\
+def fwd(x, run, interpret=None):
+    return run(x, interpret=interpret)
+""",
+    ),
+    "RPL002": dict(
+        path="fixture_rpl002.py",
+        pos="""\
+from repro.kernels.ops import scan_syndromes
+
+
+def scan(y, ht, p):
+    return scan_syndromes(y, ht, p)
+""",
+        line=5,
+        neg="""\
+from repro.kernels.ops import scan_syndromes
+
+
+def scan(y, ht, p):
+    assert y.shape[1] * (p - 1) ** 2 < 2 ** 31
+    return scan_syndromes(y, ht, p)
+""",
+    ),
+    "RPL003": dict(
+        path="fixture_rpl003.py",
+        pos="""\
+import functools
+import time
+
+import jax
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def step(x, n):
+    return x * time.time()
+""",
+        line=9,
+        neg="""\
+import functools
+import time
+
+import jax
+
+
+def host():
+    return time.time()
+
+
+@functools.partial(jax.jit, static_argnames=("scale",))
+def step(x, scale):
+    return x * float(scale)
+""",
+    ),
+    "RPL004": dict(
+        path="fixture_rpl004.py",
+        pos="""\
+import jax
+
+
+def run(xs, f):
+    out = []
+    for x in xs:
+        out.append(jax.jit(f)(x))
+    return out
+""",
+        line=7,
+        neg="""\
+import jax
+
+
+class Decoder:
+    def __init__(self):
+        self._fn = None
+
+    def get(self, f):
+        if self._fn is None:
+            self._fn = jax.jit(f)
+        return self._fn
+""",
+    ),
+    "RPL005": dict(
+        # path-sensitive: only fires inside the hot-path packages
+        path="repro/memory/fixture_rpl005.py",
+        pos="""\
+def read(reg, n):
+    reg.counter("reads").inc(n)
+""",
+        line=2,
+        neg="""\
+def read(reg, n):
+    if reg.enabled:
+        reg.counter("reads").inc(n)
+
+
+def scan(est, n):
+    if not est.enabled:
+        return
+    est.observe_scan(n, 1)
+""",
+    ),
+    "RPL006": dict(
+        path="fixture_rpl006.py",
+        pos="""\
+from repro.memory.controller import MemoryController
+
+
+def mk():
+    return MemoryController(scan_backend="host")
+""",
+        line=5,
+        neg="""\
+from repro.memory.controller import MemoryController
+
+
+def mk(other):
+    other(backend="whatever")          # backend= only flags the removed ctors
+    return MemoryController(policy="ref")
+""",
+    ),
+}
+
+
+def _write(tmp_path, rel, source):
+    path = tmp_path / rel
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(source)
+    return str(path)
+
+
+@pytest.mark.parametrize("code", sorted(FIXTURES))
+def test_rule_positive(tmp_path, code):
+    fx = FIXTURES[code]
+    path = _write(tmp_path, fx["path"], fx["pos"])
+    diags = run_file(path, select=[code])
+    assert [d.code for d in diags] == [code], diags
+    assert diags[0].line == fx["line"]
+    assert diags[0].path.endswith(fx["path"])
+
+
+@pytest.mark.parametrize("code", sorted(FIXTURES))
+def test_rule_negative(tmp_path, code):
+    fx = FIXTURES[code]
+    path = _write(tmp_path, "neg_" + os.path.basename(fx["path"]),
+                  fx["neg"]) if "/" not in fx["path"] else \
+        _write(tmp_path, fx["path"].replace("fixture", "neg"), fx["neg"])
+    assert run_file(path, select=[code]) == []
+
+
+@pytest.mark.parametrize("code", sorted(FIXTURES))
+def test_rule_noqa_suppression(tmp_path, code):
+    fx = FIXTURES[code]
+    lines = fx["pos"].splitlines()
+    lines[fx["line"] - 1] += f"  # noqa: {code}  # fixture"
+    path = _write(tmp_path, fx["path"], "\n".join(lines) + "\n")
+    assert run_file(path, select=[code]) == []
+
+
+@pytest.mark.parametrize("code", sorted(FIXTURES))
+def test_seeded_fixture_fails_cli(tmp_path, capsys, code):
+    """Acceptance: seeding any rule-violation fixture makes the CLI exit
+    nonzero and report the correct RPL code and file:line."""
+    fx = FIXTURES[code]
+    _write(tmp_path, fx["path"], fx["pos"])
+    rc = main([str(tmp_path)])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert code in out
+    assert f"{fx['path']}:{fx['line']}:" in out.replace(os.sep, "/")
+
+
+# --------------------------------------------------------------------------
+# additional per-rule semantics beyond the canonical fixtures
+# --------------------------------------------------------------------------
+
+
+def test_rpl001_literal_default(tmp_path):
+    src = """\
+def kernel_entry(x, *, interpret=True):
+    return x
+"""
+    path = _write(tmp_path, "f.py", src)
+    diags = run_file(path, select=["RPL001"])
+    assert len(diags) == 1 and diags[0].line == 1
+
+
+def test_rpl001_backend_module_exempt(tmp_path):
+    src = "POLICY = dict(interpret=True)\n"  # not even a call — clean anyway
+    path = _write(tmp_path, "kernels/backend.py", src)
+    assert run_file(path, select=["RPL001"]) == []
+
+
+def test_rpl002_raw_pallas_entry(tmp_path):
+    src = """\
+from repro.kernels.gf_matmul import gf_matmul_pallas
+
+
+def f(a, b):
+    assert a.shape[1] * 6 ** 2 < 2 ** 31
+    return gf_matmul_pallas(a, b, 7, bm=8, bn=8, bk=8)
+"""
+    path = _write(tmp_path, "f.py", src)
+    diags = run_file(path, select=["RPL002"])
+    # raw *_pallas entries are flagged even with a bound guard present
+    assert len(diags) == 1 and "raw Pallas kernel" in diags[0].message
+
+
+def test_rpl002_other_module_same_name_clean(tmp_path):
+    src = """\
+from mylib import scan_syndromes
+
+
+def scan(y, ht, p):
+    return scan_syndromes(y, ht, p)
+"""
+    path = _write(tmp_path, "f.py", src)
+    assert run_file(path, select=["RPL002"]) == []
+
+
+def test_rpl003_item_and_mutable_default(tmp_path):
+    src = """\
+import jax
+
+
+@jax.jit
+def step(x, acc=[]):
+    acc.append(x.item())
+    return x
+"""
+    path = _write(tmp_path, "f.py", src)
+    msgs = [d.message for d in run_file(path, select=["RPL003"])]
+    assert len(msgs) == 2
+    assert any("mutable default" in m for m in msgs)
+    assert any(".item()" in m for m in msgs)
+
+
+def test_rpl003_float_of_traced_param(tmp_path):
+    src = """\
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def step(x, n):
+    return float(x) + n
+"""
+    path = _write(tmp_path, "f.py", src)
+    diags = run_file(path, select=["RPL003"])
+    assert len(diags) == 1 and "float(x)" in diags[0].message
+
+
+def test_rpl004_per_call_method_without_cache(tmp_path):
+    src = """\
+import jax
+
+
+class Runner:
+    def call(self, f, x):
+        return jax.jit(f)(x)
+"""
+    path = _write(tmp_path, "f.py", src)
+    diags = run_file(path, select=["RPL004"])
+    assert diags and all(d.code == "RPL004" for d in diags)
+
+
+def test_rpl005_early_out_guard(tmp_path):
+    src = """\
+def publish(reg, stats):
+    if reg is None or not getattr(reg, "enabled", False):
+        return
+    reg.gauge("x").set(stats)
+"""
+    path = _write(tmp_path, "repro/core/f.py", src)
+    assert run_file(path, select=["RPL005"]) == []
+
+
+def test_rpl005_outside_hot_packages_clean(tmp_path):
+    fx = FIXTURES["RPL005"]
+    path = _write(tmp_path, "benchmarks/f.py", fx["pos"])
+    assert run_file(path, select=["RPL005"]) == []
+
+
+def test_rpl006_paged_dict_route(tmp_path):
+    src = """\
+def attend(apply, params, x, layer):
+    return apply(params, x, kv_cache={"paged": layer})
+"""
+    path = _write(tmp_path, "f.py", src)
+    diags = run_file(path, select=["RPL006"])
+    assert len(diags) == 1 and "paged" in diags[0].message
+
+
+# --------------------------------------------------------------------------
+# engine semantics
+# --------------------------------------------------------------------------
+
+
+def test_bare_noqa_suppresses_all_codes(tmp_path):
+    fx = FIXTURES["RPL006"]
+    lines = fx["pos"].splitlines()
+    lines[fx["line"] - 1] += "  # noqa"
+    path = _write(tmp_path, "f.py", "\n".join(lines) + "\n")
+    assert run_file(path) == []
+
+
+def test_noqa_other_code_does_not_suppress(tmp_path):
+    fx = FIXTURES["RPL006"]
+    lines = fx["pos"].splitlines()
+    lines[fx["line"] - 1] += "  # noqa: RPL001"
+    path = _write(tmp_path, "f.py", "\n".join(lines) + "\n")
+    diags = run_file(path, select=["RPL006"])
+    assert [d.code for d in diags] == ["RPL006"]
+
+
+def test_syntax_error_reported_not_raised(tmp_path):
+    path = _write(tmp_path, "f.py", "def broken(:\n")
+    diags = run_file(path)
+    assert [d.code for d in diags] == ["RPL000"]
+
+
+def test_rule_registry_complete():
+    assert sorted(RULES) == ["RPL001", "RPL002", "RPL003", "RPL004",
+                             "RPL005", "RPL006"]
+    for code, r in RULES.items():
+        assert r.code == code and r.name and r.summary
+
+
+# --------------------------------------------------------------------------
+# CLI
+# --------------------------------------------------------------------------
+
+
+def test_cli_clean_dir_exit_zero(tmp_path, capsys):
+    _write(tmp_path, "ok.py", "X = 1\n")
+    assert main([str(tmp_path)]) == 0
+    assert "0 diagnostics" in capsys.readouterr().out
+
+
+def test_cli_json_output(tmp_path, capsys):
+    fx = FIXTURES["RPL002"]
+    _write(tmp_path, fx["path"], fx["pos"])
+    rc = main([str(tmp_path), "--json"])
+    payload = json.loads(capsys.readouterr().out)
+    assert rc == 1
+    assert payload["files_scanned"] == 1
+    [diag] = payload["diagnostics"]
+    assert diag["code"] == "RPL002" and diag["line"] == fx["line"]
+
+
+def test_cli_select_subsets_rules(tmp_path, capsys):
+    fx = FIXTURES["RPL002"]
+    _write(tmp_path, fx["path"], fx["pos"])
+    assert main([str(tmp_path), "--select", "RPL001"]) == 0
+    capsys.readouterr()
+
+
+def test_cli_list_rules(capsys):
+    assert main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for code in RULES:
+        assert code in out
+
+
+# --------------------------------------------------------------------------
+# the pass runs clean on the repo at head (the CI analysis job's contract)
+# --------------------------------------------------------------------------
+
+
+def test_repo_is_clean_at_head():
+    paths = [str(REPO / d) for d in ("src", "benchmarks", "tests",
+                                     "examples")]
+    diags, n_files = run_paths([p for p in paths if os.path.isdir(p)])
+    assert n_files > 100
+    assert diags == [], "\n".join(d.format() for d in diags)

@@ -53,7 +53,7 @@ def test_perm_tables_invert():
 
 
 def test_registry_all_buildable():
-    for name, (n, k, p, dv) in CODE_REGISTRY.items():
+    for name, (n, k, p, _dv) in CODE_REGISTRY.items():
         if n > 512:
             continue                                   # keep test fast
         code = get_code(name)

@@ -55,7 +55,7 @@ def test_grads_match_oracle(rng, case):
 
     g1 = jax.grad(f1, (0, 1, 2))(q, k, v)
     g2 = jax.grad(f2, (0, 1, 2))(q, k, v)
-    for a, b in zip(g1, g2):
+    for a, b in zip(g1, g2, strict=True):
         scale = float(jnp.max(jnp.abs(b))) + 1e-9
         np.testing.assert_allclose(np.asarray(a) / scale,
                                    np.asarray(b) / scale, atol=5e-3)

@@ -195,9 +195,9 @@ def test_use_policy_override_selects_executable():
     a = jnp.arange(12, dtype=jnp.int32).reshape(3, 4) % 5
     b = (jnp.arange(20, dtype=jnp.int32).reshape(4, 5) * 3) % 5
     with use_policy("ref"):
-        r = ops.gf_matmul(a, b, 5)
+        r = ops.gf_matmul(a, b, 5)  # noqa: RPL002  # tiny fixed GF(5) case, far below the int32 bound
     with use_policy("interpret"):
-        i = ops.gf_matmul(a, b, 5)
+        i = ops.gf_matmul(a, b, 5)  # noqa: RPL002  # tiny fixed GF(5) case, far below the int32 bound
     assert np.array_equal(np.asarray(r), np.asarray(i))
 
 
@@ -221,7 +221,7 @@ def test_store_backend_kwarg_removed():
     from repro.kernels.backend import policy_from_store_backend
     from repro.memory import PagedProtectedStore
     with pytest.raises(TypeError, match="backend"):
-        PagedProtectedStore("wl40_r08", page_words=8, backend="ref")
+        PagedProtectedStore("wl40_r08", page_words=8, backend="ref")  # noqa: RPL006  # asserts the kwarg removal
     st = PagedProtectedStore("wl40_r08", page_words=8,
                              policy=policy_from_store_backend("ref"))
     assert st.policy.resolve() == "ref"
@@ -232,7 +232,7 @@ def test_pool_backend_kwarg_removed():
     from repro.memory.pool import ProtectedPagePool
     with pytest.raises(TypeError, match="backend"):
         ProtectedPagePool("wl40_r08", page_words=8, capacity_pages=4,
-                          backend="ref")
+                          backend="ref")  # noqa: RPL006  # asserts the kwarg removal
     pool = ProtectedPagePool("wl40_r08", page_words=8, capacity_pages=4,
                              policy=policy_from_store_backend("ref"))
     assert pool.policy.resolve() == "ref"
@@ -242,7 +242,7 @@ def test_controller_scan_backend_kwarg_removed():
     from repro.kernels.backend import policy_from_scan_backend
     from repro.memory.controller import MemoryController
     with pytest.raises(TypeError, match="scan_backend"):
-        MemoryController(scan_backend="host")
+        MemoryController(scan_backend="host")  # noqa: RPL006  # asserts the kwarg removal
     ctl = MemoryController(policy=policy_from_scan_backend("host"))
     assert ctl.resolved_scan_backend() == "host"
     dev = MemoryController(policy=policy_from_scan_backend("device"))
@@ -265,7 +265,7 @@ def test_paged_dict_cache_deprecated():
     pos = jnp.asarray([[layer.n_tokens]] * layer.batch)
     with pytest.warns(DeprecationWarning, match="paged"):
         y_dict, _ = attention_apply(params, x, spec, cfg, positions=pos,
-                                    kv_cache={"paged": layer})
+                                    kv_cache={"paged": layer})  # noqa: RPL006  # asserts the deprecation warning
     with warnings.catch_warnings():
         # the KVSource form must NOT warn
         warnings.simplefilter("error", DeprecationWarning)

@@ -34,6 +34,7 @@ def test_fbp_kernel_with_identity_padding(rng):
 @pytest.mark.parametrize("p", [2, 3, 7])
 @pytest.mark.parametrize("dtype", [jnp.int8, jnp.int32])
 def test_gf_matmul_matches_ref(rng, M, K, N, p, dtype):
+    assert K * (p - 1) ** 2 < 2 ** 31   # int32 kernel accumulator bound
     a = jnp.asarray(rng.integers(0, p, (M, K)), dtype)
     b = jnp.asarray(rng.integers(0, p, (K, N)), dtype)
     out_k = ops.gf_matmul(a, b, p)
@@ -46,6 +47,7 @@ def test_gf_matmul_matches_ref(rng, M, K, N, p, dtype):
                                    (200, 320, 60), (1, 512, 3)])
 @pytest.mark.parametrize("p", [2, 3, 7])
 def test_scan_syndromes_matches_ref(rng, M, K, C, p):
+    assert K * (p - 1) ** 2 < 2 ** 31   # int32 kernel accumulator bound
     y = jnp.asarray(rng.integers(0, p, (M, K)), jnp.int32)
     ht = jnp.asarray(rng.integers(0, p, (K, C)), jnp.int32)
     # plant guaranteed-clean rows so the test discriminates (zero words have
@@ -63,6 +65,7 @@ def test_scan_syndromes_codeword_sensitivity(rng):
     no zero columns by construction, dv >= 3)."""
     from repro.core import get_code, np_encode_words
     code = get_code("wl80_r08")
+    assert code.n * (code.p - 1) ** 2 < 2 ** 31   # int32 accumulator bound
     w = rng.integers(0, code.p, (32, code.k))
     enc = np_encode_words(w, code)
     ht = jnp.asarray(code.H.T, jnp.int32)

@@ -256,7 +256,7 @@ def test_scan_backend_validated():
     with pytest.raises(ValueError, match="scan_backend"):
         policy_from_scan_backend("gpu")
     with pytest.raises(TypeError, match="scan_backend"):
-        MemoryController(scan_backend="host")
+        MemoryController(scan_backend="host")  # noqa: RPL006  # asserts the kwarg removal
 
 
 def test_page_words_validated(rng):
@@ -399,7 +399,7 @@ def test_protected_checkpoint_version_guard(tmp_path, rng):
     man["prot_version"] = 1
     with open(mf, "w") as f:
         json.dump(man, f)
-    with pytest.raises(IOError, match="format"):
+    with pytest.raises(OSError, match="format"):
         ckpt.restore_checkpoint(str(tmp_path), tree)
 
 

@@ -126,6 +126,7 @@ def test_encode_words_kernel_matches_host_oracle(rng, name):
     from repro.kernels.ops import encode_words
     from repro.kernels.ref import encode_words_ref
     code = get_code(name)
+    assert code.k * (code.p - 1) ** 2 < 2 ** 31   # int32 accumulator bound
     u = jnp.asarray(rng.integers(0, code.p, (17, code.k)), jnp.int32)
     P = jnp.asarray(code.P, jnp.int32)
     host = np_encode_words(np.asarray(u), code)
@@ -215,7 +216,7 @@ def test_paged_store_validation():
     with pytest.raises(ValueError, match="backend"):
         policy_from_store_backend("gpu")
     with pytest.raises(TypeError, match="backend"):
-        PagedProtectedStore("wl40_r08", backend="ref")
+        PagedProtectedStore("wl40_r08", backend="ref")  # noqa: RPL006  # asserts the kwarg removal
     fake_mesh = types.SimpleNamespace(shape={"data": 3})
     with pytest.raises(ValueError, match="page_words=8.*mesh"):
         PagedProtectedStore("wl40_r08", page_words=8, mesh=fake_mesh)
@@ -302,7 +303,8 @@ def test_protected_kv_serving_matches_dense(tiny_lm):
     full = init_caches(cfg, B, S + 4)
     dense = jax.tree.map(
         lambda d, s: s if d.shape == s.shape
-        else jnp.pad(s, [(0, a - b) for a, b in zip(d.shape, s.shape)]),
+        else jnp.pad(s, [(0, a - b) for a, b in zip(d.shape, s.shape,
+                                                    strict=True)]),
         full, dense)
     ref, _ = _decode_some(params, cfg, dense, toks, S)
 

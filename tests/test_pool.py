@@ -158,7 +158,7 @@ def test_inject_scopes_to_owner_and_scrub_attributes(rng):
     assert rep["flagged_words"] > 0 and rep["repaired_words"] > 0
     assert set(rep["by_owner"]) == {"a"}   # only a's pages were dirty
     # b's storage was swept but untouched
-    for got, want in zip(b._iter_pages(), clean_b):
+    for got, want in zip(b._iter_pages(), clean_b, strict=True):
         assert np.array_equal(np.asarray(got), want)
     # repairs stick: a second sweep flags only what the first could not fix
     rep2 = pool.scrub(max_pages=pool.capacity_pages)

@@ -1,0 +1,217 @@
+"""Runtime sanitizer (`repro.analysis.use_sanitizer`): the GF/attention
+entry points pass corrupted inputs through *silently* when the sanitizer
+is off, and raise `SanitizerError` when it is on."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import (SanitizerError, check_finite, check_gf_symbols,
+                            check_quant_scales, sanitizer_enabled,
+                            use_sanitizer)
+from repro.core import get_code
+from repro.core.decode import decode_integers
+from repro.kernels import ops
+from repro.models.kv import ProtectedKVConfig, ProtectedKVLayer
+
+
+@pytest.fixture(autouse=True)
+def _sanitizer_off():
+    """Pin the ambient off so the silent/raising pairs below stay
+    deterministic even under a REPRO_SANITIZE=1 (CI smoke) environment."""
+    with use_sanitizer(False):
+        yield
+
+
+@pytest.fixture
+def code():
+    return get_code("wl32_r08")
+
+
+def _words(code, batch=3):
+    """All-zero words are valid codewords for every registry code."""
+    return jnp.zeros((batch, code.n), jnp.int32)
+
+
+def _layer(code_name="wl32_r08", *, batch=1, hkv=1, dh=8,
+           page_tokens=4, n_pages=1, hot=2):
+    pkv = ProtectedKVConfig(code_name=code_name, page_tokens=page_tokens,
+                            fused=True)
+    layer = ProtectedKVLayer(pkv, batch, hkv, dh)
+    t = n_pages * page_tokens + hot
+    k = jax.random.normal(jax.random.PRNGKey(0), (batch, t, hkv, dh),
+                          jnp.bfloat16)
+    v = jax.random.normal(jax.random.PRNGKey(1), (batch, t, hkv, dh),
+                          jnp.bfloat16)
+    layer.append(k, v)
+    assert layer.hot_len == hot
+    return layer
+
+
+def _q(layer, seed=7):
+    return jax.random.normal(jax.random.PRNGKey(seed),
+                             (layer.batch, 1, 2 * layer.hkv, layer.dh),
+                             jnp.bfloat16)
+
+
+# ---------------------------------------------------------------------------
+# ambient
+# ---------------------------------------------------------------------------
+
+
+def test_default_off_and_context_restores():
+    assert not sanitizer_enabled()
+    with use_sanitizer():
+        assert sanitizer_enabled()
+        with use_sanitizer(False):
+            assert not sanitizer_enabled()
+        assert sanitizer_enabled()
+    assert not sanitizer_enabled()
+
+
+def test_restores_on_exception():
+    with pytest.raises(RuntimeError):
+        with use_sanitizer():
+            raise RuntimeError("boom")
+    assert not sanitizer_enabled()
+
+
+# ---------------------------------------------------------------------------
+# injected out-of-range GF symbol: silent without, raises with
+# ---------------------------------------------------------------------------
+
+
+def test_scan_syndromes_out_of_range_symbol(code):
+    assert code.n * (code.p - 1) ** 2 < 2 ** 31   # int32 accumulator bound
+    y = _words(code).at[0, 0].set(code.p + 3)
+    ht = jnp.asarray(code.H.T, jnp.int32)
+
+    flags = ops.scan_syndromes(y, ht, code.p)      # silent: just a flag bit
+    assert flags.shape == (3,)
+
+    with use_sanitizer():
+        with pytest.raises(SanitizerError, match="GF symbol"):
+            ops.scan_syndromes(y, ht, code.p)
+        ops.scan_syndromes(_words(code), ht, code.p)   # clean words pass
+
+
+def test_decode_tolerates_drifted_levels(code):
+    """Received words are raw arithmetic levels — drifting outside [0, p)
+    is the MLC failure model, not a contract violation. The sanitizer
+    checks what the decoder *produces* (symbols in-alphabet, finite LLV
+    totals), so a drifted input must decode cleanly under it."""
+    y = _words(code).at[1, 2].set(code.p)          # drifted one level up
+
+    with use_sanitizer():
+        y_corr, res = decode_integers(code, y, n_iters=4)
+    sym = np.asarray(res.symbols)
+    assert ((sym >= 0) & (sym < code.p)).all()
+    assert np.isfinite(np.asarray(res.llv_totals)).all()
+
+
+def test_gf_matmul_out_of_range_symbol():
+    p = 5
+    assert 8 * (p - 1) ** 2 < 2 ** 31             # int32 accumulator bound
+    a = jnp.zeros((4, 8), jnp.int32).at[0, 0].set(p + 2)
+    b = jnp.zeros((8, 4), jnp.int32)
+
+    out = ops.gf_matmul(a, b, p)                   # silent: wraps mod p
+    assert out.shape == (4, 4)
+
+    with use_sanitizer():
+        with pytest.raises(SanitizerError, match="gf_matmul lhs"):
+            ops.gf_matmul(a, b, p)
+        ops.gf_matmul(jnp.zeros((4, 8), jnp.int32), b, p)
+
+
+# ---------------------------------------------------------------------------
+# NaN attention accumulator: silent NaN output without, raises with
+# ---------------------------------------------------------------------------
+
+
+def test_attend_nan_accumulator_caught():
+    layer = _layer()
+    # Poison a hot token: the NaN flows through the online-softmax
+    # m/l/acc recurrence and lands in the output without any exception.
+    layer.hot_k = layer.hot_k.at[0, 0].set(jnp.nan)
+    q = _q(layer)
+
+    out = np.asarray(layer.attend(q), np.float32)
+    assert np.isnan(out).any(), "expected silent NaN propagation"
+
+    with use_sanitizer():
+        with pytest.raises(SanitizerError, match="attend_protected"):
+            layer.attend(q)
+
+
+def test_attend_nan_query_caught():
+    layer = _layer()
+    q = _q(layer).at[0, 0, 0, 0].set(jnp.nan)
+
+    layer.attend(q)                                # silent
+
+    with use_sanitizer():
+        with pytest.raises(SanitizerError, match="query"):
+            layer.attend(q)
+
+
+def test_attend_clean_passes_under_sanitizer():
+    layer = _layer()
+    q = _q(layer)
+    ref = np.asarray(layer.attend(q), np.float32)
+    with use_sanitizer():
+        out = np.asarray(layer.attend(q), np.float32)
+    np.testing.assert_array_equal(out, ref)
+
+
+# ---------------------------------------------------------------------------
+# quantization scales
+# ---------------------------------------------------------------------------
+
+
+def test_quant_scales_checks():
+    with use_sanitizer():
+        check_quant_scales(jnp.asarray([0.0, 1.5, 2.0]))   # zero = padded page
+        with pytest.raises(SanitizerError, match="scale"):
+            check_quant_scales(jnp.asarray([1.0, -0.5]))
+        with pytest.raises(SanitizerError):
+            check_quant_scales(jnp.asarray([1.0, jnp.inf]))
+
+
+# ---------------------------------------------------------------------------
+# check primitives: disabled/no-op/skip semantics
+# ---------------------------------------------------------------------------
+
+
+def test_checks_are_noops_when_disabled():
+    check_gf_symbols(jnp.asarray([99]), 5)
+    check_finite(jnp.asarray([jnp.nan]))
+    check_quant_scales(jnp.asarray([-1.0]))
+
+
+def test_check_finite_ignores_integer_arrays():
+    with use_sanitizer():
+        check_finite(jnp.asarray([1, 2, 3], jnp.int32))
+
+
+def test_checks_skip_empty_arrays():
+    with use_sanitizer():
+        check_gf_symbols(jnp.zeros((0, 4), jnp.int32), 5)
+        check_finite(jnp.zeros((0,), jnp.float32))
+
+
+def test_checks_skip_tracers_under_jit(code):
+    """Under an enclosing jit the operands are tracers whose checkify error
+    can't be thrown host-side — the sanitizer steps aside instead of
+    breaking compiled pipelines (same convention as the obs feed)."""
+    assert code.n * (code.p - 1) ** 2 < 2 ** 31   # int32 accumulator bound
+    ht = jnp.asarray(code.H.T, jnp.int32)
+
+    @jax.jit
+    def scan(y):
+        return ops.scan_syndromes(y, ht, code.p)
+
+    y_bad = _words(code).at[0, 0].set(code.p + 3)
+    with use_sanitizer():
+        flags = scan(y_bad)
+    assert flags.shape == (3,)

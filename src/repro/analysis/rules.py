@@ -27,6 +27,12 @@ Each rule encodes an invariant the generic linters cannot see:
   ("allocation-free when disabled").
 - **RPL006 deprecated-api** — the removed `backend=`/`scan_backend=`
   constructor kwargs and the legacy `{"paged": ...}` dict KV routing.
+- **RPL007 host-sync-in-loop** — `np.asarray(...)` / `jax.device_get(...)` /
+  `.item()` inside a `for`/`while`/comprehension in the `memory/` and
+  `serving/` hot paths. One host sync per iteration serializes device
+  dispatch (the per-page repair bottleneck the coalescing pipeline fixes):
+  launch every iteration's device work first, then resolve once. Justified
+  drain points (e.g. the pipeline's windowed sync) carry `# noqa: RPL007`.
 
 Rules yield `(node, message)`; the engine handles noqa and reporting.
 """
@@ -496,3 +502,48 @@ def check_deprecated_api(ctx: FileContext):
                 yield arg, (
                     "legacy `{'paged': layer}` dict routing is deprecated; "
                     "pass the KVSource object directly (repro.nn.kv_source)")
+
+
+# --------------------------------------------------------------------------
+# RPL007 — host-sync-in-loop in the memory/serving hot paths
+# --------------------------------------------------------------------------
+
+_SYNC_PATHS = ("repro/memory/", "repro/serving/")
+_SYNC_FUNCS = ("numpy.asarray", "jax.device_get", "jax.block_until_ready")
+
+
+@rule("RPL007", "host-sync-in-loop",
+      "per-iteration host syncs in memory/ and serving/ loops")
+def check_host_sync_loop(ctx: FileContext):
+    if not any(pkg in ctx.path for pkg in _SYNC_PATHS):
+        return
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        qn = ctx.qualname(node.func)
+        if qn in _SYNC_FUNCS:
+            label = qn
+        elif isinstance(node.func, ast.Attribute) and \
+                node.func.attr == "item" and not node.args:
+            label = ".item()"
+        else:
+            continue
+        # only loops in the SAME function body count: a nested function
+        # defined inside a loop (e.g. a dispatch closure) runs on its own
+        # schedule, not once per iteration
+        in_loop = False
+        for anc in ctx.ancestors(node):
+            if isinstance(anc, _SCOPES):
+                break
+            if isinstance(anc, _LOOPS):
+                in_loop = True
+                break
+        if not in_loop:
+            continue
+        yield node, (
+            f"`{label}` inside a loop forces one host sync per iteration, "
+            "serializing device dispatch against the host (the per-page "
+            "repair bottleneck); dispatch every iteration's device work "
+            "first and resolve once (`jax.device_get` on the collected "
+            "list, or RepairQueue.drain), or mark a justified drain point "
+            "with `# noqa: RPL007`")

@@ -15,6 +15,9 @@
 - `pool`       — `ProtectedPagePool` / `PooledStore`: the multi-tenant layer
                  (shared ref-counted page pool, block tables, copy-on-write
                  aliasing, cold-page background scrub);
+- `repair`     — `RepairQueue`: the coalescing repair pipeline (cross-page/
+                 store/tenant flagged-row batching into power-of-two
+                 bucketed decode executables, one host sync per drain);
 - `packing`    — the byte<->GF(p) symbolization shared by both backends.
 """
 from .array import (ProtectedMemoryArray, StoredTensor, symbolize_bytes,
@@ -28,6 +31,7 @@ from .channel import (Channel, LevelTransition, RetentionDrift, ReadDisturb,
 from .controller import (ControllerStats, MemoryController,
                          WritebackController, ScrubController,
                          make_controller)
+from .repair import RepairQueue, bucket_sizes
 from .campaign import (ResidualProfile, NBLDPCScheme, HammingSECDEDScheme,
                        ModuloParityScheme, UnprotectedScheme, binom_pmf,
                        conditional_residual_profile, post_ber_from_profile,
@@ -44,6 +48,7 @@ __all__ = [
     "validate_transition",
     "ControllerStats", "MemoryController", "WritebackController",
     "ScrubController", "make_controller",
+    "RepairQueue", "bucket_sizes",
     "ResidualProfile", "NBLDPCScheme", "HammingSECDEDScheme",
     "ModuloParityScheme", "UnprotectedScheme", "binom_pmf",
     "conditional_residual_profile", "post_ber_from_profile", "run_campaign",

@@ -151,7 +151,7 @@ class ProtectedMemoryArray:
         for i, name in enumerate(self.names):
             st = self._store[name]
             k = jax.random.fold_in(key, i)
-            new = np.asarray(ch.apply(k, jnp.asarray(st.enc, jnp.int32),
+            new = np.asarray(ch.apply(k, jnp.asarray(st.enc, jnp.int32),  # noqa: RPL007 - fault-injection utility, not a hot path; storage is host numpy
                                       t=t, n_reads=n_reads), np.int8)
             changed += int((new != st.enc).sum())
             st.enc = new
@@ -163,15 +163,18 @@ class ProtectedMemoryArray:
         for `scrub_pages` and external scrub services."""
         return self.controller.iter_pages(self._store, page_words)
 
-    def scrub(self, *, page_words: int | None = None) -> dict:
+    def scrub(self, *, page_words: int | None = None, **kw) -> dict:
         """Explicit full sweep (any policy): scan + repair storage.
         `page_words` streams the sweep in fixed-size pages (incremental
-        scrubbing for arrays larger than device memory)."""
+        scrubbing for arrays larger than device memory). Extra keywords
+        (`coalesce=`, `scan_ahead=`, `drain_words=`) reach
+        `MemoryController.scrub_pages` — the coalescing repair pipeline is
+        the default; `coalesce=False` keeps the per-page baseline."""
         return self.controller.scrub(self.code, self._store,
-                                     page_words=page_words)
+                                     page_words=page_words, **kw)
 
-    def scrub_pages(self, pages) -> dict:
+    def scrub_pages(self, pages, **kw) -> dict:
         """Sweep an explicit page iterator (see `iter_pages`) — the hook
         for scrubbing external storage through this array's code and
         controller."""
-        return self.controller.scrub_pages(self.code, pages)
+        return self.controller.scrub_pages(self.code, pages, **kw)

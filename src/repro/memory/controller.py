@@ -60,6 +60,8 @@ from repro.core.decode import decode_integers
 from repro.obs import metrics as obs_metrics
 from repro.obs import ras as obs_ras
 
+from .repair import RepairQueue
+
 __all__ = ["ControllerStats", "MemoryController", "WritebackController",
            "ScrubController", "make_controller"]
 
@@ -163,6 +165,7 @@ class MemoryController:
         self._jit_cache: dict[int, tuple[LDPCCode, object]] = {}
         self._scan_cache: dict[int, tuple[LDPCCode, object]] = {}
         self._host_ht_cache: dict[int, tuple[LDPCCode, np.ndarray]] = {}
+        self._repair_cache: dict[int, tuple[LDPCCode, RepairQueue]] = {}
 
     # -- decode plumbing ----------------------------------------------------
 
@@ -204,9 +207,38 @@ class MemoryController:
             chunk = np.concatenate([chunk, np.zeros((size - b, n), np.int32)])
         return chunk, b
 
+    def _repair_queue(self, code: LDPCCode) -> RepairQueue:
+        """One coalescing repair queue per code (it owns the bucketed
+        decode executables every repair on this controller routes through)."""
+        hit = self._repair_cache.get(id(code))
+        if hit is not None and hit[0] is code:
+            return hit[1]
+        q = RepairQueue(code, chunk_size=self.chunk_size,
+                        n_iters=self.n_iters, damping=self.damping,
+                        llv_scale=self.llv_scale, llv_mode=self.llv_mode,
+                        use_sharded=self.use_sharded)
+        self._repair_cache[id(code)] = (code, q)
+        return q
+
     def _decode_words(self, code: LDPCCode, words: np.ndarray):
-        """Decode (B, n) stored level-words -> (symbols (B, n), fail (B,)).
-        Chunks are padded to `chunk_size` so one executable serves any B."""
+        """Decode (B, n) stored level-words -> (symbols (B, n), fail (B,))
+        through the repair queue's bucketed executables (8/16/…/chunk_size
+        rows): sparse reads no longer pad to a full chunk, every chunk
+        dispatches asynchronously, and one host sync resolves the batch."""
+        syms, fail, iters, _pad = self._repair_queue(code).decode_batch(words)
+        est = obs_ras.current()
+        if est.enabled and iters is not None:
+            # outputs are concrete here (post-sync) — feed decoder-stress/
+            # fail telemetry to the RAS estimator
+            est.observe_decode(iters, self.n_iters, detect_fail=fail)
+        return syms, fail
+
+    def _decode_words_legacy(self, code: LDPCCode, words: np.ndarray):
+        """The pre-coalescing decode path: every chunk pads to the full
+        `chunk_size` executable and syncs to host before the next dispatch.
+        Kept as the measured baseline behind `scrub_pages(coalesce=False)`
+        (the repair-parity tests and `bench_scrub`'s repair-throughput
+        section diff the coalesced pipeline against it)."""
         fn = self._decoder(code)
         est = obs_ras.current()
         B = words.shape[0]
@@ -216,14 +248,12 @@ class MemoryController:
         for lo in range(0, B, cs):
             chunk, b = self._pad_block(words[lo:lo + cs], cs, code.n)
             _y, res = fn(jnp.asarray(chunk))
-            syms[lo:lo + b] = np.asarray(res.symbols[:b])
-            fail[lo:lo + b] = np.asarray(res.detect_fail[:b])
+            syms[lo:lo + b] = np.asarray(res.symbols[:b])  # noqa: RPL007 - per-chunk sync IS the measured baseline
+            fail[lo:lo + b] = np.asarray(res.detect_fail[:b])  # noqa: RPL007 - per-chunk sync IS the measured baseline
             if est.enabled:
-                # outputs are concrete here (jitted executable, eager call)
-                # — feed decoder-stress/fail telemetry to the RAS estimator
                 iters = getattr(res, "iterations", None)
                 if iters is not None:
-                    est.observe_decode(np.asarray(iters)[:b], self.n_iters,
+                    est.observe_decode(np.asarray(iters)[:b], self.n_iters,  # noqa: RPL007 - concrete post-sync values
                                        detect_fail=fail[lo:lo + b])
         return syms, fail
 
@@ -316,14 +346,22 @@ class MemoryController:
                                enc: np.ndarray) -> np.ndarray:
         """Fused Pallas scan: pages are streamed through one cached
         executable in fixed `scan_block`-row slices (zero-padded tails are
-        valid codewords — never flagged); only the (b,) mask comes back."""
+        valid codewords — never flagged); only the (b,) mask comes back.
+        Every block scan is dispatched before any mask is pulled, so the
+        device pipelines the whole page and the host syncs exactly once."""
         fn = self._scanner(code)
         B = enc.shape[0]
         sb = self.scan_block
-        flags = np.empty(B, bool)
+        launched = []
         for lo in range(0, B, sb):
             blk, b = self._pad_block(enc[lo:lo + sb], sb, code.n)
-            flags[lo:lo + b] = np.asarray(fn(jnp.asarray(blk)))[:b]
+            launched.append((fn(jnp.asarray(blk)), b))
+        masks = jax.device_get([m for m, _ in launched])
+        flags = np.empty(B, bool)
+        lo = 0
+        for mask, (_dev, b) in zip(masks, launched, strict=True):
+            flags[lo:lo + b] = mask[:b]
+            lo += b
         return flags
 
     def _correct(self, code: LDPCCode, enc: np.ndarray):
@@ -396,7 +434,7 @@ class MemoryController:
         return gen()
 
     def scrub(self, code: LDPCCode, store: dict, *,
-              page_words: int | None = None) -> dict:
+              page_words: int | None = None, coalesce: bool = True) -> dict:
         """Full-array sweep: scan every stored word, repair flagged words in
         place (every policy may be scrubbed explicitly; only
         `ScrubController` does it automatically). `page_words` (default: the
@@ -406,17 +444,37 @@ class MemoryController:
         if page_words is None:
             page_words = self.page_words
         return self.scrub_pages(code, self.iter_pages(store, page_words),
-                                page_words=page_words)
+                                page_words=page_words, coalesce=coalesce)
 
     def scrub_pages(self, code: LDPCCode, pages: Iterable[np.ndarray], *,
-                    page_words: int | None = None) -> dict:
+                    page_words: int | None = None, coalesce: bool = True,
+                    scan_ahead: int = 4,
+                    drain_words: int | None = None) -> dict:
         """Paged sweep over any iterator of writable (b, n) level-word
         pages: scan each page (host BLAS or the fused device kernel, per
-        the resolved kernel policy), batch-decode only the flagged words, and write
-        repairs back through the page views. One cached scan executable and
-        one cached decode executable serve every page, so the stream never
-        recompiles; pages are consumed lazily (one page resident at a
-        time)."""
+        the resolved kernel policy), batch-decode only the flagged words,
+        and write repairs back through the page views. Pages are consumed
+        lazily, so arrays larger than device memory stream through.
+
+        `coalesce=True` (default) runs the repair pipeline: pages are
+        scanned `scan_ahead` ahead while earlier pages' flagged rows sit on
+        the cross-page `RepairQueue`, which drains through bucketed decode
+        executables once `drain_words` rows accumulate (one host sync per
+        scan window and one per drain, instead of one per page and per
+        chunk). `coalesce=False` keeps the per-page scan→pad→decode→sync
+        baseline the pipeline is benchmarked against. Both produce
+        bit-identical repairs (FBP is row-independent)."""
+        if coalesce:
+            return self._scrub_pages_coalesced(
+                code, pages, page_words=page_words, scan_ahead=scan_ahead,
+                drain_words=drain_words)
+        return self._scrub_pages_baseline(code, pages, page_words=page_words)
+
+    def _scrub_pages_baseline(self, code: LDPCCode,
+                              pages: Iterable[np.ndarray], *,
+                              page_words: int | None = None) -> dict:
+        """Per-page sweep: one scan sync and one full-`chunk_size` decode
+        dispatch train per flagged page (the pre-pipeline behavior)."""
         t0 = time.perf_counter()
         words = flagged_n = corrected_n = fail_n = n_pages = 0
         page_stats = []
@@ -432,7 +490,7 @@ class MemoryController:
             pg_flagged = int(flagged.sum())
             pg_fail = 0
             if pg_flagged:
-                syms, f = self._decode_words(code, page[flagged])
+                syms, f = self._decode_words_legacy(code, page[flagged])
                 pg_fail = int(f.sum())
                 rows = np.flatnonzero(flagged)[~f]
                 if rows.size:
@@ -455,18 +513,7 @@ class MemoryController:
                     "uncorrectable": pg_fail,
                     "seconds": time.perf_counter() - tp})
         dt = time.perf_counter() - t0
-        self.stats.scrub_rounds += 1
-        self.stats.scrub_words += words
-        self.stats.scrub_cells += words * code.n
-        self.stats.scrub_corrected += corrected_n
-        self.stats.scrub_uncorrectable += fail_n
-        self.stats.scrub_seconds += dt
-        if reg.enabled:
-            labels = {"layer": "controller", "policy": self.policy,
-                      "code": f"gf{code.p}n{code.n}"}
-            reg.counter("scrub_words_scanned", **labels).inc(words)
-            reg.counter("scrub_corrected", **labels).inc(corrected_n)
-            reg.counter("scrub_uncorrectable", **labels).inc(fail_n)
+        self._note_scrub_totals(code, words, corrected_n, fail_n, dt)
         return {"policy": self.policy, "backend": self._scan_route(code),
                 "words_scanned": words,
                 "cells_scanned": words * code.n, "flagged": flagged_n,
@@ -474,8 +521,156 @@ class MemoryController:
                 "pages": n_pages, "page_words": page_words,
                 "page_stats": page_stats,
                 "page_stats_truncated": n_pages > MAX_PAGE_STATS,
+                "coalesced": False, "seconds": dt,
+                "bandwidth_cells_per_s": words * code.n / dt if dt else 0.0}
+
+    def _scrub_pages_coalesced(self, code: LDPCCode,
+                               pages: Iterable[np.ndarray], *,
+                               page_words: int | None = None,
+                               scan_ahead: int = 4,
+                               drain_words: int | None = None) -> dict:
+        """The repair pipeline: double-buffered page windows keep scans in
+        flight while the previous window's masks resolve in one transfer;
+        flagged rows coalesce on the `RepairQueue` across pages and drain
+        through bucketed decode executables (again one sync per drain)."""
+        t0 = time.perf_counter()
+        scan_ahead = max(1, scan_ahead)
+        if drain_words is None:
+            drain_words = 4 * self.chunk_size
+        queue = self._repair_queue(code)
+        route = self._scan_route(code)
+        fn = self._scanner(code) if route == "device" else None
+        est = obs_ras.current()
+        reg = obs_metrics.current()
+        totals = {"words": 0, "flagged": 0, "corrected": 0,
+                  "uncorrectable": 0, "pages": 0}
+        page_stats: list[dict] = []
+        drain_stats: list[dict] = []
+
+        def flush():
+            rep = queue.drain()
+            if rep["words"]:
+                totals["corrected"] += rep["repaired"]
+                totals["uncorrectable"] += rep["failed"]
+                drain_stats.append({k: rep[k] for k in (
+                    "entries", "words", "repaired", "failed", "pad_rows",
+                    "dispatch_rows", "pad_waste", "seconds")})
+
+        def scan_dispatch(page):
+            """Dispatch one page's scan without syncing: the device route
+            returns in-flight (mask, rows) pairs per scan block; the host
+            route computes the np mask eagerly (it never leaves the host)."""
+            if fn is None:
+                return self._scan_syndromes_host(code, page)
+            out = []
+            sb = self.scan_block
+            for lo in range(0, page.shape[0], sb):
+                blk, b = self._pad_block(page[lo:lo + sb], sb, code.n)
+                out.append((fn(jnp.asarray(blk)), b))
+            return out
+
+        def consume(window):
+            """Resolve one scanned window — a single host sync pulls every
+            block mask while the next window's scans and any queued decodes
+            stay in flight — then enqueue the flagged rows."""
+            if not window:
+                return
+            if fn is not None:
+                flat = iter(jax.device_get(
+                    [m for _pg, blocks in window for m, _b in blocks]))
+            for page, scanned in window:
+                if fn is not None:
+                    mask = np.empty(page.shape[0], bool)
+                    lo = 0
+                    for _dev, b in scanned:
+                        mask[lo:lo + b] = next(flat)[:b]
+                        lo += b
+                else:
+                    mask = scanned
+                totals["pages"] += 1
+                totals["words"] += page.shape[0]
+                rows = np.flatnonzero(mask)
+                pg_flagged = int(rows.size)
+                totals["flagged"] += pg_flagged
+                if est.enabled:
+                    est.observe_scan(pg_flagged, page.shape[0],
+                                     n_symbols=code.n)
+                slot = None
+                if totals["pages"] <= MAX_PAGE_STATS:
+                    slot = {"words": int(page.shape[0]),
+                            "flagged": pg_flagged, "corrected": 0,
+                            "uncorrectable": 0}
+                    page_stats.append(slot)
+                if not pg_flagged:
+                    continue
+
+                def writeback(syms, ok, page=page, rows=rows, slot=slot):
+                    good = rows[ok]
+                    if good.size:
+                        page[good] = syms[ok].astype(page.dtype)
+                    if slot is not None:
+                        slot["corrected"] = int(ok.sum())
+                        slot["uncorrectable"] = int((~ok).sum())
+
+                queue.enqueue(page[rows], writeback,
+                              provenance=("page", totals["pages"] - 1, rows))
+
+        prev: list = []
+        cur: list = []
+        for page in pages:
+            cur.append((page, scan_dispatch(page)))
+            if len(cur) >= scan_ahead:
+                consume(prev)
+                prev, cur = cur, []
+                if queue.pending_words >= drain_words:
+                    flush()
+        consume(prev)
+        consume(cur)
+        flush()
+        dt = time.perf_counter() - t0
+        words, corrected_n, fail_n = (totals["words"], totals["corrected"],
+                                      totals["uncorrectable"])
+        self._note_scrub_totals(code, words, corrected_n, fail_n, dt)
+        if reg.enabled and drain_stats:
+            reg.histogram("scrub_drains_per_sweep",
+                          layer="controller").observe(len(drain_stats))
+        pad_rows = sum(d["pad_rows"] for d in drain_stats)
+        dispatch_rows = sum(d["dispatch_rows"] for d in drain_stats)
+        return {"policy": self.policy, "backend": route,
+                "words_scanned": words,
+                "cells_scanned": words * code.n,
+                "flagged": totals["flagged"],
+                "corrected": corrected_n, "uncorrectable": fail_n,
+                "pages": totals["pages"], "page_words": page_words,
+                "page_stats": page_stats,
+                "page_stats_truncated": totals["pages"] > MAX_PAGE_STATS,
+                "coalesced": True, "scan_ahead": scan_ahead,
+                "drains": len(drain_stats), "drain_stats": drain_stats,
+                "repair_pad_rows": pad_rows,
+                "repair_dispatch_rows": dispatch_rows,
+                "repair_pad_waste": (pad_rows / dispatch_rows
+                                     if dispatch_rows else 0.0),
                 "seconds": dt,
                 "bandwidth_cells_per_s": words * code.n / dt if dt else 0.0}
+
+    def _note_scrub_totals(self, code: LDPCCode, words: int, corrected_n: int,
+                           fail_n: int, dt: float) -> None:
+        """Shared sweep accounting: cumulative `ControllerStats` counters
+        plus the metrics-registry export (both sweep flavors report the
+        same way)."""
+        self.stats.scrub_rounds += 1
+        self.stats.scrub_words += words
+        self.stats.scrub_cells += words * code.n
+        self.stats.scrub_corrected += corrected_n
+        self.stats.scrub_uncorrectable += fail_n
+        self.stats.scrub_seconds += dt
+        reg = obs_metrics.current()
+        if reg.enabled:
+            labels = {"layer": "controller", "policy": self.policy,
+                      "code": f"gf{code.p}n{code.n}"}
+            reg.counter("scrub_words_scanned", **labels).inc(words)
+            reg.counter("scrub_corrected", **labels).inc(corrected_n)
+            reg.counter("scrub_uncorrectable", **labels).inc(fail_n)
 
 
 class WritebackController(MemoryController):

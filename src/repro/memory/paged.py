@@ -171,6 +171,7 @@ class PagedProtectedStore:
         self._encode_fn = None
         self._scan_fn = None
         self._decode_fn = None
+        self._repair_q = None
         # read/scrub correction accounting (per-store, so a serving layer can
         # attribute corrections to the tenant that owns the store)
         self.stats = ControllerStats()
@@ -290,6 +291,28 @@ class PagedProtectedStore:
                     lambda y: decode_integers(code, y, **kw))
         return self._decode_fn
 
+    def _repair_queue(self):
+        """The coalescing repair queue this store's scrubs drain through
+        (cross-page flagged-row batching; see `repro.memory.repair`).
+        `PooledStore` delegates to the pool template's queue, so every
+        tenant of a pool shares one queue — and one coalesced drain.
+
+        Serving-facing stores pin a SINGLE decode bucket
+        (`min_bucket=page_words`): a drain here is at most a few pages'
+        sparse flags, so the bucket ladder could only trade pad rows
+        (microseconds) for extra jit compiles (~seconds each) that land as
+        p99 spikes inside serving steps. The controller's scrub-daemon
+        queue keeps the full power-of-two ladder, where sweep shapes are
+        stable and bucketing pays."""
+        if self._repair_q is None:
+            from .repair import RepairQueue
+            self._repair_q = RepairQueue(
+                self.code, chunk_size=self.page_words,
+                min_bucket=self.page_words,
+                n_iters=self.n_iters, damping=self.damping,
+                llv_scale=self.llv_scale, llv_mode=self.llv_mode)
+        return self._repair_q
+
     # -- write path ---------------------------------------------------------
 
     def _encode_rows(self, u: jnp.ndarray) -> jnp.ndarray:
@@ -360,7 +383,8 @@ class PagedProtectedStore:
         (checkpoint hand-off to the host backend)."""
         if not self.n_pages:
             return np.zeros((0, self.code.n), np.int8)
-        flat = np.concatenate([np.asarray(pg) for pg in self._iter_pages()])
+        # one transfer for the whole store, not one per page
+        flat = np.concatenate(jax.device_get(list(self._iter_pages())))
         return flat[:self._n_words].astype(np.int8)
 
     # -- fault injection ----------------------------------------------------
@@ -401,8 +425,9 @@ class PagedProtectedStore:
         if not self.n_pages:
             return np.zeros(0, bool)
         fn = self._scanner()
-        flags = np.concatenate([np.asarray(fn(pg))
-                                for pg in self._iter_pages()])
+        # dispatch every page's scan, then pull all masks in one sync
+        flags = np.concatenate(
+            jax.device_get([fn(pg) for pg in self._iter_pages()]))
         return flags[:self._n_words]
 
     def iter_corrected(self, *, scan_first: bool = True,
@@ -520,13 +545,35 @@ class PagedProtectedStore:
         kw.setdefault("mesh", self.mesh)
         return decode_pipelined(self.code, self._iter_pages(), **kw)
 
-    def scrub(self, pages=None) -> dict:
-        """Sweep the pages: scan, decode flagged pages, write repairs back
+    def scrub(self, pages=None, *, coalesce: bool = True) -> dict:
+        """Sweep the pages: scan, repair flagged words, write back
         (device-side). `pages` optionally restricts the sweep to a subset of
         page indices (the engine's cold-page background scrub). Returns
-        {pages, flagged_words, repaired_words}."""
+        {pages, flagged_words, repaired_words}.
+
+        `coalesce=True` (default) runs the repair pipeline: every page's
+        scan is dispatched before any mask is pulled (one sync for the
+        sweep), flagged rows are gathered on device and coalesced across
+        pages on the `RepairQueue`, and one bucketed drain repairs them —
+        sparse flags pay a bucket-sized FBP instead of a whole-page one.
+        `coalesce=False` keeps the per-page scan→whole-page-decode baseline
+        (bit-identical repairs; FBP is row-independent)."""
+        idxs = list(range(self.n_pages) if pages is None else pages)
+        if coalesce:
+            report = self._scrub_coalesced(idxs)
+        else:
+            report = self._scrub_baseline(idxs)
+        self.stats.scrub_rounds += 1
+        self.stats.scrub_words += report["pages"] * self.page_words
+        self.stats.scrub_corrected += report["repaired_words"]
+        self.stats.scrub_uncorrectable += (report["flagged_words"]
+                                           - report["repaired_words"])
+        return report
+
+    def _scrub_baseline(self, idxs: list[int]) -> dict:
+        """Per-page sweep: sync each page's flag count, decode the whole
+        page when any row flags (the pre-pipeline behavior)."""
         scan, decode = self._scanner(), self._decoder()
-        idxs = range(self.n_pages) if pages is None else list(pages)
         flagged_words = repaired = swept = 0
         for i in idxs:
             page = self.page(i)
@@ -540,9 +587,41 @@ class PagedProtectedStore:
             good = flags & ~res.detect_fail
             self._set_page(i, jnp.where(good[:, None], res.symbols, page))
             repaired += int(jnp.sum(good))
-        self.stats.scrub_rounds += 1
-        self.stats.scrub_words += swept * self.page_words
-        self.stats.scrub_corrected += repaired
-        self.stats.scrub_uncorrectable += flagged_words - repaired
         return {"pages": swept, "flagged_words": flagged_words,
-                "repaired_words": repaired}
+                "repaired_words": repaired, "coalesced": False}
+
+    def _scrub_coalesced(self, idxs: list[int]) -> dict:
+        """Pipelined sweep: dispatch all scans, one mask sync, pull the
+        flagged pages whole in a second batched sync, one coalesced
+        bucketed drain. Rows are sliced and repaired on host page copies
+        so every device op stays page- or bucket-shaped — per-flag-count
+        gathers/scatters would recompile on every new count."""
+        if not idxs:
+            return {"pages": 0, "flagged_words": 0, "repaired_words": 0,
+                    "coalesced": True}
+        scan = self._scanner()
+        masks = jax.device_get([scan(self.page(i)) for i in idxs])
+        queue = self._repair_queue()
+        owner = getattr(self, "owner", None)
+        flagged_words = 0
+        flagged = [(i, rows) for i, mask in zip(idxs, masks, strict=True)
+                   if (rows := np.flatnonzero(mask)).size]
+        pages = jax.device_get([self.page(i) for i, _ in flagged])
+        for (i, rows), arr in zip(flagged, pages, strict=True):
+            arr = np.array(arr)        # device_get views can be read-only
+            flagged_words += int(rows.size)
+
+            def writeback(syms, ok, i=i, rows=rows, arr=arr):
+                good = rows[ok]
+                if good.size:
+                    arr[good] = syms[ok].astype(arr.dtype)
+                    self._set_page(i, jnp.asarray(arr, jnp.int32))
+
+            queue.enqueue(arr[rows], writeback, owner=owner,
+                          provenance=("store", i, rows))
+        rep = queue.drain()
+        return {"pages": len(idxs), "flagged_words": flagged_words,
+                "repaired_words": rep["repaired"], "coalesced": True,
+                "drain": {k: rep[k] for k in (
+                    "entries", "words", "repaired", "failed", "pad_rows",
+                    "dispatch_rows", "pad_waste", "seconds")}}

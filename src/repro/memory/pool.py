@@ -33,6 +33,7 @@ from collections.abc import Iterator
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.construction import LDPCCode
 from repro.obs import metrics as obs_metrics
@@ -180,9 +181,10 @@ class ProtectedPagePool:
         return ranked[:top] if top is not None else ranked
 
     def scrub(self, *, max_pages: int | None = None, now: int = 0,
-              min_age: int = 0, prioritize: bool = False) -> dict:
-        """Incrementally sweep allocated pages: scan, decode flagged pages,
-        write repairs back, attributing repairs to each page's owner.
+              min_age: int = 0, prioritize: bool = False,
+              coalesce: bool = True) -> dict:
+        """Incrementally sweep allocated pages: scan, repair flagged words,
+        write back, attributing repairs to each page's owner.
 
         A persistent round-robin cursor spreads work across calls;
         `max_pages` caps this call's sweep (the engine interleaves small
@@ -194,9 +196,15 @@ class ProtectedPagePool:
         never-scanned pages first, then pages by descending scan-flag EWMA,
         so a small `max_pages` budget lands on the pages that have actually
         been flagging (the estimator-driven schedule the serving engine
-        uses) instead of whatever the cursor reaches next."""
-        scan = self._template._scanner()
-        decode = self._template._decoder()
+        uses) instead of whatever the cursor reaches next.
+
+        `coalesce=True` (default) runs the repair pipeline: every in-budget
+        page's scan is dispatched before any mask is pulled (one sync per
+        sweep), and all tenants' flagged rows coalesce through the shared
+        `RepairQueue` into one bucketed drain — the multi-tenant engine's
+        background scrub amortizes one drain per step. `coalesce=False`
+        keeps the per-page scan→whole-page-decode baseline (bit-identical
+        repairs and identical per-owner attribution)."""
         allocated = [pid for pid in range(self.capacity_pages)
                      if self._storage[pid] is not None]
         if not allocated:
@@ -210,50 +218,25 @@ class ProtectedPagePool:
             start = next((j for j, pid in enumerate(allocated)
                           if pid >= self._scrub_cursor), 0)
             order = allocated[start:] + allocated[:start]
-        est = obs_ras.current()
-        swept = flagged_words = repaired = 0
-        by_owner: dict[object, dict] = {}
+        # budget/age selection is identical for both sweep flavors (and
+        # independent of scan results), so resolve it up front
+        selected: list[int] = []
         for pid in order:
-            if swept >= budget:
+            if len(selected) >= budget:
                 break
             if now - self._stamp[pid] < min_age:
                 continue
-            swept += 1
+            selected.append(pid)
             if not prioritize:
                 self._scrub_cursor = pid + 1
-            page = self._storage[pid]
-            flags = scan(page)
-            nf = int(jnp.sum(flags))
-            a = self.flag_alpha if self._scanned[pid] else 1.0
-            self._flag_ewma[pid] += a * (nf / page.shape[0]
-                                         - self._flag_ewma[pid])
-            self._scanned[pid] = True
-            owner = self._owner[pid]
-            if est.enabled:
-                est.observe_scan(nf, page.shape[0], n_symbols=self.code.n,
-                                 region=str(owner) if owner is not None
-                                 else "")
-            if not nf:
-                continue
-            flagged_words += nf
-            _y, res = decode(page)
-            good = flags & ~res.detect_fail
-            self._storage[pid] = jnp.where(good[:, None], res.symbols, page)
-            ok = int(jnp.sum(good))
-            repaired += ok
-            if est.enabled:
-                iters = getattr(res, "iterations", None)
-                if iters is not None:
-                    est.observe_decode(iters, self._template.n_iters,
-                                       detect_fail=res.detect_fail,
-                                       region=str(owner) if owner is not None
-                                       else "")
-            ent = by_owner.setdefault(
-                owner, {"flagged_words": 0, "repaired_words": 0})
-            ent["flagged_words"] += nf
-            ent["repaired_words"] += ok
         if self._scrub_cursor >= self.capacity_pages:
             self._scrub_cursor = 0
+        if coalesce:
+            swept, flagged_words, repaired, by_owner = \
+                self._scrub_selected_coalesced(selected)
+        else:
+            swept, flagged_words, repaired, by_owner = \
+                self._scrub_selected_baseline(selected)
         self.stats.scrub_rounds += 1
         self.stats.scrub_words += swept * self.page_words
         self.stats.scrub_corrected += repaired
@@ -277,6 +260,96 @@ class ProtectedPagePool:
                     ent["repaired_words"])
         return {"pages": swept, "flagged_words": flagged_words,
                 "repaired_words": repaired, "by_owner": by_owner}
+
+    def _note_page_scan(self, pid: int, nf: int, est) -> object:
+        """Post-scan bookkeeping shared by both sweep flavors: flag EWMA,
+        scanned marker, estimator feed. Returns the page's owner."""
+        a = self.flag_alpha if self._scanned[pid] else 1.0
+        self._flag_ewma[pid] += a * (nf / self.page_words
+                                     - self._flag_ewma[pid])
+        self._scanned[pid] = True
+        owner = self._owner[pid]
+        if est.enabled:
+            est.observe_scan(nf, self.page_words, n_symbols=self.code.n,
+                             region=str(owner) if owner is not None else "")
+        return owner
+
+    def _scrub_selected_baseline(self, selected: list[int]):
+        """Per-page sweep over the selected pids: sync each page's flag
+        count, decode the whole page when any row flags."""
+        scan = self._template._scanner()
+        decode = self._template._decoder()
+        est = obs_ras.current()
+        flagged_words = repaired = 0
+        by_owner: dict[object, dict] = {}
+        for pid in selected:
+            page = self._storage[pid]
+            flags = scan(page)
+            nf = int(jnp.sum(flags))
+            owner = self._note_page_scan(pid, nf, est)
+            if not nf:
+                continue
+            flagged_words += nf
+            _y, res = decode(page)
+            good = flags & ~res.detect_fail
+            self._storage[pid] = jnp.where(good[:, None], res.symbols, page)
+            ok = int(jnp.sum(good))
+            repaired += ok
+            if est.enabled:
+                iters = getattr(res, "iterations", None)
+                if iters is not None:
+                    est.observe_decode(iters, self._template.n_iters,
+                                       detect_fail=res.detect_fail,
+                                       region=str(owner) if owner is not None
+                                       else "")
+            ent = by_owner.setdefault(
+                owner, {"flagged_words": 0, "repaired_words": 0})
+            ent["flagged_words"] += nf
+            ent["repaired_words"] += ok
+        return len(selected), flagged_words, repaired, by_owner
+
+    def _scrub_selected_coalesced(self, selected: list[int]):
+        """Pipelined sweep over the selected pids: every scan dispatched
+        before one mask sync, flagged pages pulled whole in a second
+        batched sync, flagged rows from every tenant's pages coalesced
+        through the shared `RepairQueue`, one bucketed drain (which also
+        feeds the estimator per owner region). Row slicing and repair
+        writes happen on host page copies: every device op here is
+        page-shaped or bucket-shaped, so sweeps reuse warm executables no
+        matter how the flag counts vary (a per-flag-count gather/scatter
+        would recompile on every new count)."""
+        if not selected:
+            return 0, 0, 0, {}
+        scan = self._template._scanner()
+        masks = jax.device_get(
+            [scan(self._storage[pid]) for pid in selected])
+        est = obs_ras.current()
+        queue = self._template._repair_queue()
+        flagged_words = 0
+        flagged = []
+        for pid, mask in zip(selected, masks, strict=True):
+            rows = np.flatnonzero(mask)
+            owner = self._note_page_scan(pid, int(rows.size), est)
+            if rows.size:
+                flagged.append((pid, rows, owner))
+                flagged_words += int(rows.size)
+        pages = jax.device_get([self._storage[pid]
+                                for pid, _, _ in flagged])
+        for (pid, rows, owner), arr in zip(flagged, pages, strict=True):
+            arr = np.array(arr)        # device_get views can be read-only
+
+            def writeback(syms, ok, pid=pid, rows=rows, arr=arr):
+                good = rows[ok]
+                if good.size:
+                    arr[good] = syms[ok].astype(arr.dtype)
+                    self._storage[pid] = jnp.asarray(arr, jnp.int32)
+
+            queue.enqueue(arr[rows], writeback, owner=owner,
+                          provenance=("pool", pid, rows))
+        rep = queue.drain()
+        by_owner = {owner: dict(ent)
+                    for owner, ent in rep["by_owner"].items()}
+        return len(selected), flagged_words, rep["repaired"], by_owner
 
     # -- fault injection over the whole pool --------------------------------
 
@@ -421,6 +494,11 @@ class PooledStore(PagedProtectedStore):
 
     def _decoder(self):
         return self.pool._template._decoder()
+
+    def _repair_queue(self):
+        # one shared queue (and one set of bucketed decode executables) for
+        # every tenant — cross-tenant repairs coalesce into the same drain
+        return self.pool._template._repair_queue()
 
 
 class _BlockTableView:

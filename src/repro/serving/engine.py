@@ -726,9 +726,34 @@ class ServingEngine:
             logits, _ = lm.decode_step(
                 self.params, self.cfg, self.caches,
                 jnp.asarray(tokens, jnp.int32), jnp.asarray(pos, jnp.int32))
-            # argmax + host transfer is the step's sync point, so the span
-            # covers device completion, not just dispatch
-            nxt = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))
+            # keep the sampled tokens on device for now: the argmax host
+            # transfer is the step's sync point, and deferring it lets the
+            # background scrub's scan/drain dispatches below queue behind
+            # the decode step instead of waiting out its completion
+            nxt_dev = jnp.argmax(logits[:, -1, :], axis=-1)
+        self._step_no += 1
+        if self.protected:
+            self._touch_pages()
+            if self.scrub_every and self._due_for_scrub():
+                # scrub moves storage TOWARD clean, so memoized decoded
+                # views (themselves corrected reads) stay consistent — no
+                # invalidation, which is why interleaved scrub stays cheap.
+                # (Pages of sequences that retire on this step's token may
+                # be swept too — harmless: they are still allocated here,
+                # and attribution follows page ownership either way.)
+                est = obs_ras.current()
+                with span("engine.scrub") as ssp:
+                    rep = self.pool.scrub(max_pages=self.scrub_max_pages,
+                                          now=self._step_no,
+                                          min_age=self.scrub_min_age,
+                                          prioritize=est.enabled)
+                    ssp.set(pages=rep["pages"],
+                            flagged=rep["flagged_words"],
+                            repaired=rep["repaired_words"])
+                self.scrub_reports.append(rep)
+                report["scrubbed_pages"] = rep["pages"]
+        with span("engine.sample_sync", step=self._step_no - 1):
+            nxt = np.asarray(nxt_dev)
         for b, seq in enumerate(self.slots):
             if seq is None or not active_mask[b]:
                 continue
@@ -742,24 +767,6 @@ class ServingEngine:
                 self._release_slot(seq)
                 seq.status = "done"
                 report["retired"] += 1
-        self._step_no += 1
-        if self.protected:
-            self._touch_pages()
-            if self.scrub_every and self._due_for_scrub():
-                # scrub moves storage TOWARD clean, so memoized decoded
-                # views (themselves corrected reads) stay consistent — no
-                # invalidation, which is why interleaved scrub stays cheap
-                est = obs_ras.current()
-                with span("engine.scrub") as ssp:
-                    rep = self.pool.scrub(max_pages=self.scrub_max_pages,
-                                          now=self._step_no,
-                                          min_age=self.scrub_min_age,
-                                          prioritize=est.enabled)
-                    ssp.set(pages=rep["pages"],
-                            flagged=rep["flagged_words"],
-                            repaired=rep["repaired_words"])
-                self.scrub_reports.append(rep)
-                report["scrubbed_pages"] = rep["pages"]
         return report
 
     def _due_for_scrub(self) -> bool:

@@ -147,6 +147,29 @@ def mk(other):
     return MemoryController(policy="ref")
 """,
     ),
+    "RPL007": dict(
+        # path-sensitive: only fires in memory/ and serving/
+        path="repro/memory/fixture_rpl007.py",
+        pos="""\
+import numpy as np
+
+
+def sweep(pages, fn):
+    out = []
+    for page in pages:
+        out.append(np.asarray(fn(page)))
+    return out
+""",
+        line=7,
+        neg="""\
+import jax
+
+
+def sweep(pages, fn):
+    launched = [fn(page) for page in pages]
+    return jax.device_get(launched)
+""",
+    ),
 }
 
 
@@ -320,6 +343,50 @@ def attend(apply, params, x, layer):
     assert len(diags) == 1 and "paged" in diags[0].message
 
 
+def test_rpl007_outside_sync_packages_clean(tmp_path):
+    fx = FIXTURES["RPL007"]
+    path = _write(tmp_path, "repro/core/f.py", fx["pos"])
+    assert run_file(path, select=["RPL007"]) == []
+
+
+def test_rpl007_item_and_device_get_in_loop(tmp_path):
+    src = """\
+import jax
+
+
+def drain(results, masks):
+    total = 0
+    for r in results:
+        total += r.sum().item()
+    while masks:
+        jax.device_get(masks.pop())
+    return total
+"""
+    path = _write(tmp_path, "repro/serving/f.py", src)
+    diags = run_file(path, select=["RPL007"])
+    assert [d.line for d in diags] == [7, 9]
+    assert ".item()" in diags[0].message
+    assert "jax.device_get" in diags[1].message
+
+
+def test_rpl007_nested_def_in_loop_exempt(tmp_path):
+    # a function *defined* in a loop body runs later, outside the loop
+    src = """\
+import numpy as np
+
+
+def build(pages):
+    thunks = []
+    for page in pages:
+        def pull(page=page):
+            return np.asarray(page)
+        thunks.append(pull)
+    return thunks
+"""
+    path = _write(tmp_path, "repro/memory/f.py", src)
+    assert run_file(path, select=["RPL007"]) == []
+
+
 # --------------------------------------------------------------------------
 # engine semantics
 # --------------------------------------------------------------------------
@@ -350,7 +417,7 @@ def test_syntax_error_reported_not_raised(tmp_path):
 
 def test_rule_registry_complete():
     assert sorted(RULES) == ["RPL001", "RPL002", "RPL003", "RPL004",
-                             "RPL005", "RPL006"]
+                             "RPL005", "RPL006", "RPL007"]
     for code, r in RULES.items():
         assert r.code == code and r.name and r.summary
 

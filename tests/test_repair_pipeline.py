@@ -1,0 +1,293 @@
+"""Coalesced repair pipeline parity: the cross-page `RepairQueue` must be
+bit-exact with the per-page baseline at every layer.
+
+FBP is row-independent (per-codeword early-exit freeze), so batching flagged
+rows across pages/stores/tenants and decoding them through power-of-two
+bucketed executables must reproduce the per-page sweep exactly: same repaired
+symbols, same fail masks, same per-owner accounting. These tests pin that
+down for every registry code, at bucket boundaries, and on the zero-flag
+fast path.
+"""
+import numpy as np
+import pytest
+
+from repro.core import CODE_REGISTRY, get_code, np_encode_words
+from repro.kernels.backend import KernelPolicy
+from repro.memory import (PagedProtectedStore, PooledStore,
+                          ProtectedPagePool, RepairQueue, bucket_sizes)
+from repro.memory.controller import MemoryController
+
+SLOW_N = 512            # codes at/above this wordline get the slow marker
+
+
+def _corrupted(code, rng, n_words, n_errs):
+    """(n_words, n) int8 codewords with `n_errs` single-cell hits spread
+    over distinct rows, plus the clean reference."""
+    w = rng.integers(0, code.p, (n_words, code.k))
+    enc = np_encode_words(w, code).astype(np.int8)
+    bad = enc.copy()
+    rows = rng.choice(n_words, size=min(n_errs, n_words), replace=False)
+    cols = rng.integers(0, code.n, rows.size)
+    bad[rows, cols] = (bad[rows, cols] + 1) % code.p
+    return bad, enc
+
+
+def _ctrl(**kw):
+    return MemoryController(n_iters=10, **kw)
+
+
+def _scrub_both(code, bad, *, page_words, chunk_size=64, policy=None):
+    """Run baseline and coalesced controller sweeps on copies of `bad`;
+    return (baseline_report, coalesced_report, baseline_enc, coalesced_enc)."""
+    reports, storages = [], []
+    for coalesce in (False, True):
+        kw = {"policy": policy} if policy is not None else {}
+        ctrl = _ctrl(chunk_size=chunk_size, **kw)
+        store = {"x": type("S", (), {"enc": bad.copy()})()}
+        rep = ctrl.scrub(code, store, page_words=page_words,
+                         coalesce=coalesce)
+        reports.append(rep)
+        storages.append(store["x"].enc)
+    return reports[0], reports[1], storages[0], storages[1]
+
+
+def _assert_reports_match(rb, rc):
+    for key in ("pages", "words_scanned", "flagged", "corrected",
+                "uncorrectable"):
+        assert rb[key] == rc[key], (key, rb[key], rc[key])
+    assert rb["coalesced"] is False and rc["coalesced"] is True
+    # per-page stats: identical modulo the timing-free keys
+    assert len(rb["page_stats"]) == len(rc["page_stats"])
+    for sb, sc in zip(rb["page_stats"], rc["page_stats"], strict=True):
+        for key in ("words", "flagged", "corrected", "uncorrectable"):
+            assert sb[key] == sc[key], (key, sb, sc)
+
+
+# ---------------------------------------------------------------------------
+# registry-wide controller parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "name",
+    [pytest.param(n, marks=pytest.mark.slow)
+     if CODE_REGISTRY[n][0] >= SLOW_N else n
+     for n in sorted(CODE_REGISTRY)])
+def test_controller_parity_all_registry_codes(name, rng):
+    """Acceptance: coalesced+bucketed scrub is bit-exact with the per-page
+    baseline on every registry code (GF(3)/GF(5)/GF(7)). Decode is
+    deterministic but not guaranteed to converge on every single hit for
+    the small codes — residual rows must be exactly the uncorrectable ones,
+    identical on both paths."""
+    code = get_code(name)
+    bad, clean = _corrupted(code, rng, n_words=96, n_errs=23)
+    rb, rc, enc_b, enc_c = _scrub_both(code, bad, page_words=16)
+    _assert_reports_match(rb, rc)
+    np.testing.assert_array_equal(enc_b, enc_c)
+    assert rc["corrected"] + rc["uncorrectable"] == rc["flagged"] == 23
+    resid = (enc_c != clean).any(axis=1)
+    assert int(resid.sum()) == rc["uncorrectable"]   # repaired rows exact
+    assert rc["drains"] >= 1 and rc["repair_dispatch_rows"] >= rc["flagged"]
+
+
+def test_controller_parity_device_scan_route(rng):
+    """The windowed device scan route (scan-ahead + one device_get per
+    window) flags and repairs identically to the host route."""
+    code = get_code("wl160_r08")
+    bad, clean = _corrupted(code, rng, n_words=128, n_errs=31)
+    rb, rc, enc_b, enc_c = _scrub_both(
+        code, bad, page_words=16, policy=KernelPolicy("interpret"))
+    assert rc["backend"] == "device" and rb["backend"] == "device"
+    _assert_reports_match(rb, rc)
+    np.testing.assert_array_equal(enc_b, enc_c)
+    np.testing.assert_array_equal(enc_c, clean)
+
+
+def test_controller_zero_flag_sweep(rng):
+    """A clean sweep never builds a decode dispatch: zero drains with work,
+    zero pad rows, and storage is untouched on both paths."""
+    code = get_code("wl64_r08")
+    w = rng.integers(0, code.p, (64, code.k))
+    clean = np_encode_words(w, code).astype(np.int8)
+    rb, rc, enc_b, enc_c = _scrub_both(code, clean, page_words=16)
+    _assert_reports_match(rb, rc)
+    assert rb["flagged"] == rc["flagged"] == 0
+    assert rc["repair_dispatch_rows"] == 0 and rc["repair_pad_rows"] == 0
+    np.testing.assert_array_equal(enc_b, clean)
+    np.testing.assert_array_equal(enc_c, clean)
+
+
+@pytest.mark.parametrize("n_errs", [7, 8, 9, 63, 64, 65])
+def test_controller_parity_bucket_boundaries(n_errs, rng):
+    """Flag counts straddling the min-bucket (8) and chunk-size (64)
+    boundaries: padding rows are invisible in symbols and accounting."""
+    code = get_code("wl160_r08")
+    bad, clean = _corrupted(code, rng, n_words=130, n_errs=n_errs)
+    rb, rc, enc_b, enc_c = _scrub_both(code, bad, page_words=13,
+                                       chunk_size=64)
+    _assert_reports_match(rb, rc)
+    assert rb["flagged"] == n_errs
+    np.testing.assert_array_equal(enc_b, enc_c)
+    np.testing.assert_array_equal(enc_c, clean)
+
+
+# ---------------------------------------------------------------------------
+# paged store + pool parity
+# ---------------------------------------------------------------------------
+
+
+def test_paged_store_parity(rng):
+    code = get_code("wl160_r08")
+    bad, clean = _corrupted(code, rng, n_words=96, n_errs=17)
+    stores = []
+    for coalesce in (False, True):
+        st = PagedProtectedStore(code, page_words=16)
+        st.append_encoded(bad)
+        rep = st.scrub(coalesce=coalesce)
+        stores.append((st, rep))
+    (st_b, rb), (st_c, rc) = stores
+    for key in ("pages", "flagged_words", "repaired_words"):
+        assert rb[key] == rc[key], (key, rb, rc)
+    assert rc["coalesced"] and rc["drain"]["entries"] >= 1
+    for i in range(st_b.n_pages):
+        np.testing.assert_array_equal(np.asarray(st_b.page(i)),
+                                      np.asarray(st_c.page(i)))
+    np.testing.assert_array_equal(st_c.export_words(), clean)
+
+
+def test_pool_parity_per_owner_attribution(rng):
+    """Two tenants share one pool; the coalesced sweep must report the same
+    per-owner flagged/repaired splits as the per-page baseline."""
+    code = get_code("wl160_r08")
+    bad, clean = _corrupted(code, rng, n_words=192, n_errs=29)
+
+    def sweep(coalesce):
+        pool = ProtectedPagePool(code, page_words=16, capacity_pages=16)
+        s1 = PooledStore(pool, owner="t1")
+        s2 = PooledStore(pool, owner="t2")
+        s1.append_encoded(bad[:96])
+        s2.append_encoded(bad[96:])
+        rep = pool.scrub(coalesce=coalesce)
+        return pool, s1, s2, rep
+
+    _, a1, a2, ra = sweep(False)
+    _, b1, b2, rb = sweep(True)
+    for key in ("pages", "flagged_words", "repaired_words"):
+        assert ra[key] == rb[key], (key, ra, rb)
+    assert ra["by_owner"] == rb["by_owner"]
+    assert set(rb["by_owner"]) == {"t1", "t2"}
+    np.testing.assert_array_equal(a1.export_words(), b1.export_words())
+    np.testing.assert_array_equal(a2.export_words(), b2.export_words())
+    np.testing.assert_array_equal(
+        np.concatenate([b1.export_words(), b2.export_words()]), clean)
+
+
+def test_pool_prioritized_scrub_coalesced(rng):
+    """prioritize=True (dirtiest-first order) under the coalesced path
+    still repairs everything and keeps the cursor semantics."""
+    code = get_code("wl160_r08")
+    bad, clean = _corrupted(code, rng, n_words=96, n_errs=13)
+    pool = ProtectedPagePool(code, page_words=16, capacity_pages=8)
+    st = PooledStore(pool, owner="t")
+    st.append_encoded(bad)
+    pool.scrub(prioritize=True)                    # seed EWMA flag rates
+    rep = pool.scrub(prioritize=True, coalesce=True)
+    assert rep["flagged_words"] == 0               # first sweep repaired all
+    np.testing.assert_array_equal(st.export_words(), clean)
+
+
+# ---------------------------------------------------------------------------
+# RepairQueue unit surface
+# ---------------------------------------------------------------------------
+
+
+def _fresh_queue(monkeypatch, code, **kw):
+    """A RepairQueue with a private executable cache — pad/dispatch
+    accounting assertions must not depend on buckets other tests warmed
+    in the process-wide cache."""
+    from repro.memory import repair
+    monkeypatch.setattr(repair, "_DECODER_CACHE", {})
+    return RepairQueue(code, **kw)
+
+
+def test_bucket_sizes_and_bucket_for():
+    assert bucket_sizes(256) == [8, 16, 32, 64, 128, 256]
+    assert bucket_sizes(64, min_bucket=16) == [16, 32, 64]
+    assert bucket_sizes(6) == [6]                  # tiny chunk: single bucket
+    q = RepairQueue(get_code("wl40_r08"), chunk_size=64)
+    assert q.bucket_for(1) == 8 and q.bucket_for(8) == 8
+    assert q.bucket_for(9) == 16 and q.bucket_for(64) == 64
+    assert q.bucket_for(63) == 64
+
+
+def test_dispatch_size_prefers_warm_buckets(monkeypatch):
+    """A drain pads up to an already-built executable rather than building
+    its ideal (smaller) bucket; the exact size always wins once built."""
+    q = _fresh_queue(monkeypatch, get_code("wl40_r08"), chunk_size=64)
+    assert q._dispatch_size(3) == 8                # cold: ideal bucket
+    q._decoder(16)
+    assert q._dispatch_size(3) == 16               # warm 16 absorbs 3 rows
+    assert q._dispatch_size(16) == 16
+    assert q._dispatch_size(17) == 32              # nothing warm fits: ideal
+    q._decoder(8)
+    assert q._dispatch_size(3) == 8                # exact size wins again
+
+
+def test_repair_queue_drain_accounting(rng, monkeypatch):
+    """Multi-entry drain: per-entry writebacks see their own slices, owners
+    aggregate, pad accounting matches the bucket arithmetic."""
+    code = get_code("wl160_r08")
+    q = _fresh_queue(monkeypatch, code, chunk_size=64, n_iters=10)
+    bad, clean = _corrupted(code, rng, n_words=11, n_errs=11)
+    got = {}
+
+    def wb(tag):
+        def _wb(syms, ok):
+            got[tag] = (syms.copy(), ok.copy())
+        return _wb
+
+    q.enqueue(bad[:4], wb("a"), owner="t1", provenance=("page", 0))
+    q.enqueue(bad[4:], wb("b"), owner="t2", provenance=("page", 1))
+    q.enqueue(np.zeros((0, code.n), np.int8), wb("c"))   # no-op enqueue
+    assert len(q) == 2 and q.pending_words == 11
+    rep = q.drain()
+    assert len(q) == 0 and q.pending_words == 0
+    assert rep["entries"] == 2 and rep["words"] == 11
+    assert rep["repaired"] == 11 and rep["failed"] == 0
+    # 11 rows -> one 16-row bucket: 5 pad rows
+    assert rep["pad_rows"] == 5 and rep["dispatch_rows"] == 16
+    assert rep["by_owner"] == {
+        "t1": {"flagged_words": 4, "repaired_words": 4},
+        "t2": {"flagged_words": 7, "repaired_words": 7}}
+    np.testing.assert_array_equal(got["a"][0], clean[:4])
+    np.testing.assert_array_equal(got["b"][0], clean[4:])
+    assert got["a"][1].all() and got["b"][1].all()
+    assert "c" not in got
+    assert q.drains == 1 and q.total_rows == 11 and q.total_pad_rows == 5
+    assert q.pad_waste == pytest.approx(5 / 16)
+    # empty drain is a cheap no-op
+    empty = q.drain()
+    assert empty["entries"] == 0 and empty["words"] == 0
+    assert q.drains == 1
+
+
+def test_repair_queue_decode_batch_matches_unbucketed(rng, monkeypatch):
+    """decode_batch through mixed bucket sizes equals one flat decode."""
+    import jax.numpy as jnp
+
+    from repro.core.decode import decode_integers
+    code = get_code("wl160_r08")
+    q = _fresh_queue(monkeypatch, code, chunk_size=16, min_bucket=8,
+                     n_iters=10)
+    bad, clean = _corrupted(code, rng, n_words=37, n_errs=37)
+    syms, fail, _iters, pad_rows = q.decode_batch(bad)
+    # 37 rows -> 16 + 16 + tail 5; the tail's ideal 8-bucket is cold but
+    # the 16 executable is warm by then, so it absorbs the tail: 11 pads
+    assert pad_rows == 11
+    assert not fail.any()
+    _yc, res = decode_integers(code, jnp.asarray(bad, jnp.int32),
+                               n_iters=10, damping=q.damping,
+                               llv_scale=q.llv_scale, llv_mode=q.llv_mode,
+                               early_exit=True)
+    np.testing.assert_array_equal(syms, np.asarray(res.symbols))
+    np.testing.assert_array_equal(syms, clean)
